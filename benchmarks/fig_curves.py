@@ -1,0 +1,27 @@
+"""Figures 2 & 3: accuracy over communication rounds (CSV curve data)."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+
+
+def main(dataset: str, fast: bool = False, variants=("metafed_full", "fedavg", "fedprox")):
+    fig = "Fig.2" if dataset == "mnist" else "Fig.3"
+    print(f"=== {fig}: accuracy curves ({dataset}) ===")
+    print("variant,round,accuracy")
+    rows = []
+    for v in variants:
+        hist = common.run_variant(v, dataset, fast=fast)
+        for r, a in zip(hist["round"], hist["acc"]):
+            rows.append((v, r, a))
+            print(f"{v},{r},{a:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", choices=["mnist", "cifar"], default="mnist")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    main(args.dataset, args.fast)

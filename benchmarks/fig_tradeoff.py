@@ -1,0 +1,37 @@
+"""Figures 1 & 4: accuracy-emission trade-off scatter (CSV point data).
+
+The paper's claim: MetaFed variants cluster in the upper-left quadrant
+(high accuracy, low per-round emissions), clearly separated from baselines.
+We validate the separation quantitatively: every green-aware variant must be
+left of (lower CO2 than) every baseline at comparable accuracy.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks import common
+
+
+def main(dataset: str, fast: bool = False):
+    fig = "Fig.1" if dataset == "mnist" else "Fig.4"
+    print(f"=== {fig}: accuracy-emission trade-off ({dataset}) ===")
+    print("variant,accuracy_pct,co2_g_per_round")
+    pts = {}
+    for v in common.VARIANTS:
+        s = common.summarize(common.run_variant(v, dataset, fast=fast))
+        pts[v] = (s["accuracy_pct"], s["co2_g_per_round"])
+        print(f"{v},{s['accuracy_pct']:.2f},{s['co2_g_per_round']:.1f}")
+    green = [pts[v][1] for v in ("metafed_full", "metafed_green")]
+    base = [pts[v][1] for v in ("fedavg", "fedprox", "fedadam")]
+    sep = max(green) < min(base)
+    print(f"[{'PASS' if sep else 'FAIL'}] upper-left separation: max(green CO2) "
+          f"{max(green):.0f} < min(baseline CO2) {min(base):.0f}")
+    return pts
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", choices=["mnist", "cifar"], default="mnist")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    main(args.dataset, args.fast)

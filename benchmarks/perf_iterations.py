@@ -1,0 +1,131 @@
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> re-analyse.
+
+Runs the three selected (arch x shape) pairs through their optimization
+variants and writes tagged roofline JSONs next to the baselines.  Each
+variant encodes one hypothesis from EXPERIMENTS.md §Perf; the comparison
+table prints the before/after of the dominant term.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations --pair qwen2_train
+    PYTHONPATH=src python -m benchmarks.perf_iterations --all
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+# The dry-run import must come first (sets XLA_FLAGS before jax loads).
+from repro.launch import dryrun
+from repro.launch.train import TrainSetup
+
+OUT = "results/dryrun"
+
+BASE_SETUP = dict(local_steps=1, secure_agg=True, sa_bits=16, server_opt="adafactor")
+
+# (arch, shape, variant-tag) -> (TrainSetup kwargs, cfg overrides, hypothesis)
+EXPERIMENTS = {
+    "qwen2_train": {
+        "arch": "qwen2-0.5b",
+        "shape": "train_4k",
+        "why": "paper-representative: edge-scale client model, FL train round",
+        "variants": [
+            ("ddp", dict(strategy="ddp"), {},
+             "0.5B model x 16-way TP is collective-bound (per-layer activation "
+             "all-reduces ~50 GB/dev). Replicate weights, shard batch over "
+             "'model' too -> one params-sized grad AR (~2.5 GB). Predict ~10-20x "
+             "collective-term cut."),
+            ("ddp_masklocal", dict(strategy="ddp", mask_sum_local=True), {},
+             "Of the remaining ICI, half is the mask-sum all-reduce. Dealer "
+             "seeds are server-known: regenerate mask sum locally (16x PRG "
+             "compute, negligible vs model flops). Predict ~2x cut of the "
+             "secure-agg share."),
+        ],
+    },
+    "mixtral_prefill": {
+        "arch": "mixtral-8x22b",
+        "shape": "prefill_32k",
+        "why": "most collective-bound pair; useful-fraction 5% (full TxS scores despite SWA)",
+        "variants": [
+            ("banded", {}, dict(banded_swa=True),
+             "SWA window 4096 at T=32768: banded attention computes only the "
+             "(T, 2W) diagonal band. REVISED after baseline analysis: MoE "
+             "dominates flops here, so predict only a few % compute cut — "
+             "kept as the falsification record."),
+            ("moe_batched", {}, dict(moe_batched_dispatch=True),
+             "The flat (B*T) MoE dispatch collapses the batch axis, forcing "
+             "GSPMD to gather tokens across data shards every layer "
+             "(~14 TB/dev ICI). Batch-preserving dispatch keeps tokens "
+             "sharded. Predict >10x collective-term cut."),
+            ("moe_batched_banded", {}, dict(moe_batched_dispatch=True, banded_swa=True, probs_bf16=True),
+             "Stack banding + bf16 probs on top of the dispatch fix: with the "
+             "collective storm gone, attention bytes matter again. Predict "
+             "further memory-term cut."),
+        ],
+    },
+    "mixtral_train": {
+        "arch": "mixtral-8x22b",
+        "shape": "train_4k",
+        "why": "worst absolute roofline bound (memory term ~129s)",
+        "variants": [
+            ("moe_batched", {}, dict(moe_batched_dispatch=True),
+             "Same dispatch fix as prefill: the train step pays the token "
+             "gather in fwd AND bwd. Predict large collective + memory cut."),
+            ("moe_batched_bf16", {}, dict(moe_batched_dispatch=True, probs_bf16=True),
+             "fp32 prob tensors are the next HBM stream at T=4096 x 48 heads: "
+             "bf16 probs into PV halves it. Predict memory term -15-30%."),
+            ("moe_batched_masklocal", dict(mask_sum_local=True),
+             dict(moe_batched_dispatch=True, probs_bf16=True),
+             "Secure-agg mask regeneration replaces the 2nd integer AR: at "
+             "141B params the mask AR is ~35GB/dev. Predict collective -30%+ "
+             "of the secure-agg share, small HBM increase (PRG writes)."),
+        ],
+    },
+}
+
+
+def run_experiment(name: str) -> list[dict]:
+    exp = EXPERIMENTS[name]
+    rows = []
+    base_fn = os.path.join(OUT, f"{exp['arch']}__{exp['shape']}__16x16.json")
+    if os.path.exists(base_fn):
+        rows.append(json.load(open(base_fn)) | {"tag": "baseline"})
+    else:
+        print(f"(baseline missing for {name}; running it)")
+        rows.append(dryrun.run_pair(exp["arch"], exp["shape"], False, OUT))
+    for tag, setup_kw, cfg_over, hypothesis in exp["variants"]:
+        print(f"\n--- {name}/{tag}: {hypothesis}")
+        setup = TrainSetup(**(BASE_SETUP | setup_kw))
+        d = dryrun.run_pair(exp["arch"], exp["shape"], False, OUT,
+                            setup=setup, tag=tag, cfg_overrides=cfg_over)
+        d["hypothesis"] = hypothesis
+        rows.append(d)
+    _print_table(name, rows)
+    return rows
+
+
+def _print_table(name: str, rows: list[dict]):
+    print(f"\n=== {name}: {EXPERIMENTS[name]['why']} ===")
+    print(f"{'variant':<22}{'compute_s':>11}{'memory_s':>11}{'collect_s':>11}{'bound':>9}")
+    base = rows[0]
+    for r in rows:
+        if "compute_s" not in r:
+            continue
+        marks = []
+        for k in ("compute_s", "memory_s", "collective_s"):
+            delta = r[k] / max(base[k], 1e-12)
+            marks.append(f"{r[k]:>10.2e}" + ("*" if delta < 0.95 else " "))
+        print(f"{r.get('tag') or 'baseline':<22}{marks[0]}{marks[1]}{marks[2]}{r['dominant']:>9}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(EXPERIMENTS), default=None)
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    names = list(EXPERIMENTS) if (args.all or not args.pair) else [args.pair]
+    for n in names:
+        run_experiment(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Render the §Dry-run/§Roofline tables of EXPERIMENTS.md from results/dryrun.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments > /tmp/tables.md
+Splices between the AUTOGEN markers of EXPERIMENTS.md when --write is given.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ORDER_A = ["mixtral-8x22b", "internvl2-1b", "qwen2-0.5b", "hubert-xlarge", "zamba2-1.2b",
+           "qwen3-0.6b", "deepseek-7b", "grok-1-314b", "xlstm-125m", "gemma-7b"]
+ORDER_S = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir="results/dryrun"):
+    rows = {}
+    for fn in glob.glob(os.path.join(out_dir, "*.json")):
+        d = json.load(open(fn))
+        rows[(d["arch"], d["shape"], d["mesh"], d.get("tag") or "")] = d
+    return rows
+
+
+def fmt_e(x):
+    return f"{x:.2e}"
+
+
+def render(rows) -> str:
+    out = []
+    out.append("### Baseline roofline table — single pod (16x16 = 256 chips)\n")
+    out.append("| arch | shape | compute_s | memory_s | collective_s | bound | useful% | ici/dev | peak mem |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for a in ORDER_A:
+        for s in ORDER_S:
+            d = rows.get((a, s, "16x16", ""))
+            if d is None:
+                out.append(f"| {a} | {s} | - | - | - | MISSING | | | |")
+            elif d.get("skip"):
+                out.append(f"| {a} | {s} | — | — | — | SKIP (encoder-only: no decode) | | | |")
+            else:
+                out.append(
+                    f"| {a} | {s} | {fmt_e(d['compute_s'])} | {fmt_e(d['memory_s'])} | "
+                    f"{fmt_e(d['collective_s'])} | **{d['dominant']}** | "
+                    f"{100*d['useful_fraction']:.0f}% | {d['ici_traffic_per_device']/2**30:.1f} G | "
+                    f"{d['mem'].get('peak_bytes',0)/2**30:.0f} G |"
+                )
+    out.append("\n### Multi-pod dry-run — 2x16x16 = 512 chips (pod axis shards)\n")
+    out.append("| arch | shape | status | flops/dev vs 1-pod | collective_s | bound |")
+    out.append("|---|---|---|---|---|---|")
+    for a in ORDER_A:
+        for s in ORDER_S:
+            d = rows.get((a, s, "2x16x16", ""))
+            b = rows.get((a, s, "16x16", ""))
+            if d is None:
+                out.append(f"| {a} | {s} | MISSING | | | |")
+            elif d.get("skip"):
+                out.append(f"| {a} | {s} | SKIP (encoder-only) | | | |")
+            else:
+                ratio = (
+                    d["flops_per_device"] / b["flops_per_device"]
+                    if b and not b.get("skip") else float("nan")
+                )
+                out.append(
+                    f"| {a} | {s} | OK | {ratio:.2f}x | {fmt_e(d['collective_s'])} | {d['dominant']} |"
+                )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true")
+    args = ap.parse_args()
+    txt = render(load())
+    if args.write and os.path.exists("EXPERIMENTS.md"):
+        doc = open("EXPERIMENTS.md").read()
+        start = doc.index("<!-- AUTOGEN-TABLES -->")
+        end = doc.index("<!-- /AUTOGEN-TABLES -->")
+        doc = doc[: start + len("<!-- AUTOGEN-TABLES -->")] + "\n" + txt + "\n" + doc[end:]
+        open("EXPERIMENTS.md", "w").write(doc)
+        print("EXPERIMENTS.md updated")
+    else:
+        print(txt)
+
+
+if __name__ == "__main__":
+    main()

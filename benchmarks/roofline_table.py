@@ -1,0 +1,43 @@
+"""§Roofline: render the dry-run roofline table from results/dryrun/*.json."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.roofline.analysis import RooflineReport, format_table
+
+
+def load_reports(out_dir: str = "results/dryrun") -> list[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main(out_dir: str = "results/dryrun"):
+    rows = load_reports(out_dir)
+    if not rows:
+        print(f"no dry-run reports under {out_dir}; run `python -m repro.launch.dryrun --all` first")
+        return []
+    print(f"{'arch':<16}{'shape':<13}{'mesh':<9}{'compute_s':>11}{'memory_s':>11}"
+          f"{'collect_s':>11} {'bound':<11}{'useful%':>8}{'ici/dev':>10}")
+    for r in rows:
+        if r.get("skip"):
+            print(f"{r['arch']:<16}{r['shape']:<13}{r['mesh']:<9} SKIP: {r['skip']}")
+            continue
+        print(
+            f"{r['arch']:<16}{r['shape']:<13}{r['mesh']:<9}"
+            f"{r['compute_s']:>11.3e}{r['memory_s']:>11.3e}{r['collective_s']:>11.3e}"
+            f" {r['dominant']:<11}{100*r['useful_fraction']:>7.1f}%"
+            f"{r['ici_traffic_per_device']/2**30:>9.2f}G"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    main(ap.parse_args().dir)

@@ -1,0 +1,64 @@
+"""Federated fine-tuning of an assigned LM architecture under MetaFed.
+
+Demonstrates that the orchestration layer is model-agnostic (deliverable f x
+paper technique): the federated clients train a reduced variant of any
+``--arch`` from the assigned pool on synthetic token streams, with the same
+carbon-aware selection and masked aggregation as the vision experiments.
+
+    PYTHONPATH=src python examples/carbon_aware_llm.py --arch qwen3-0.6b --rounds 6
+    PYTHONPATH=src python examples/carbon_aware_llm.py --arch xlstm-125m
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import base as cfg_base
+from repro.data.pipeline import build_clients
+from repro.data.synthetic import make_markov_tokens
+from repro.fl.simulation import FLConfig, Simulation
+from repro.models import transformer as tf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=cfg_base.ASSIGNED, default="qwen3-0.6b")
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = cfg_base.get(args.arch).reduced()
+    if cfg.family in ("vlm", "audio"):
+        raise SystemExit(f"{args.arch}: use the modality-specific example drivers")
+    print(f"arch={cfg.name} family={cfg.family} d_model={cfg.d_model} layers={cfg.n_layers}")
+
+    toks = make_markov_tokens(cfg.vocab, n_seqs=640, seq_len=args.seq, seed=0)
+    labels_for_split = toks[:, 0] % 10  # pseudo-labels for the non-IID partition
+    from repro.data.partition import dirichlet_partition
+
+    parts = dirichlet_partition(labels_for_split, args.clients, alpha=0.5)
+    data = {"tokens": toks}
+    clients = build_clients(data, parts)
+    test = {"tokens": make_markov_tokens(cfg.vocab, 128, args.seq, seed=1)}
+
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    loss_fn = lambda p, b: tf.loss_fn(p, cfg, b)
+    eval_fn = lambda p, b: tf.loss_fn(p, cfg, b)[1]
+
+    fl = FLConfig(
+        algorithm="fedavg", selection="rl_green", n_clients=args.clients,
+        clients_per_round=3, rounds=args.rounds, local_steps=3, batch_size=8,
+        client_lr=0.05, secure_agg=True, sa_clip=20.0, eval_every=1,
+    )
+    sim = Simulation(fl, loss_fn, eval_fn, params, clients, test)
+    hist = sim.run(progress=lambda d: print(
+        f"round {d['round']}  token-acc={d['acc']:.3f}  CO2={d['co2_g']:.0f} g", flush=True
+    ))
+    print(f"\nfinal next-token accuracy: {hist['final_acc']:.3f} "
+          f"(uniform baseline ~{1/min(cfg.vocab, 32):.3f})")
+    print(f"mean CO2/round: {hist['mean_co2_g']:.0f} g")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Batched autoregressive serving with the decode path (inference side).
+
+Loads a reduced assigned architecture, prefills a batch of prompts, then
+decodes new tokens with the ring-buffer KV cache / recurrent state — the
+same ``decode_step`` the multi-pod dry-run lowers for ``decode_32k`` and
+``long_500k``.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch zamba2-1.2b --new-tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfg_base
+from repro.models import transformer as tf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=[a for a in cfg_base.ASSIGNED], default="qwen2-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = cfg_base.get(args.arch).reduced()
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no autoregressive decode")
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+
+    B, P = args.batch, args.prompt_len
+    max_len = P + args.new_tokens
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)
+
+    step = jax.jit(lambda p, t, s: tf.decode_step(p, cfg, t, s))
+    state = tf.init_decode_state(cfg, B, max_len)
+
+    t0 = time.time()
+    logits = None
+    for t in range(P):  # prefill via decode (tests the exact serving path)
+        logits, state = step(params, prompts[:, t : t + 1], state)
+    print(f"prefill {P} tokens x batch {B}: {time.time()-t0:.2f}s")
+
+    toks = []
+    t0 = time.time()
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    for _ in range(args.new_tokens):
+        toks.append(tok)
+        logits, state = step(params, tok, state)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    dt = time.time() - t0
+    out = jnp.concatenate(toks, axis=1)
+    print(f"decoded {args.new_tokens} tokens x batch {B} in {dt:.2f}s "
+          f"({args.new_tokens*B/dt:.1f} tok/s on 1 CPU core)")
+    print("sample token ids:", out[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

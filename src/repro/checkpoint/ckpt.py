@@ -1,0 +1,76 @@
+"""Checkpointing: npz tensor store + msgpack manifest (no orbax offline).
+
+Saves/restores arbitrary pytrees (params, optimizer state, FL server state,
+orchestrator Q-tables) with a manifest recording tree structure, dtypes and
+the sharding spec names — enough to restore onto a different mesh (the array
+data is saved unsharded; reloading applies the target mesh's NamedShardings).
+
+Layout:  <dir>/manifest.msgpack  +  <dir>/arrays.npz
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+from repro.utils import PyTree
+
+
+def _flatten_with_names(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save(path: str, tree: PyTree, metadata: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    names, leaves, _ = _flatten_with_names(tree)
+    arrays = {f"a{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "version": 1,
+        "names": names,
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+        "treedef": _treedef_repr(tree),
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+
+
+def _treedef_repr(tree: PyTree) -> str:
+    return str(jax.tree_util.tree_structure(tree))
+
+
+def restore(path: str, like: PyTree, shardings: Optional[PyTree] = None) -> PyTree:
+    """Restore into the structure of ``like`` (names must match)."""
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    names_new, leaves_like, treedef = _flatten_with_names(like)
+    if names_new != manifest["names"]:
+        missing = set(manifest["names"]) ^ set(names_new)
+        raise ValueError(f"checkpoint/tree mismatch; differing leaves: {sorted(missing)[:8]}")
+    out = []
+    shard_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    for i, (leaf_like) in enumerate(leaves_like):
+        arr = data[f"a{i}"]
+        if list(arr.shape) != list(leaf_like.shape):
+            raise ValueError(f"shape mismatch at {names_new[i]}: {arr.shape} vs {leaf_like.shape}")
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr.astype(leaf_like.dtype), shard_leaves[i]))
+        else:
+            out.append(arr.astype(leaf_like.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def metadata(path: str) -> dict:
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())["metadata"]

@@ -1,0 +1,113 @@
+"""Carbon-intensity and energy model (paper §III-D, Eq. 8).
+
+Grid intensity per provider region:
+
+    I_i(t) = I_base + A * sin(2*pi*t/T + phi_i) + eps(t),   eps ~ N(0, sigma^2)
+
+with the paper's constants I_base = 150 gCO2/kWh, A = 70, T = 24 h.  Each
+resource provider r_i = <C_i, N_i, E_i, L_i> (Eq. 1) carries a region phase
+phi_i (its "geolocation" L_i for emission modeling), a normalized compute
+capability C_i, network bandwidth N_i and an energy-efficiency factor E_i.
+
+Energy accounting: a client's round consumes
+    e_i = round_flops / (C_i * PEAK_FLOPS) * POWER_W / E_i   joules
+(compute-bound device model), and emits ``kwh * I_i(t)`` gCO2.  The absolute
+scale is calibrated so a ResNet-Tiny round over 10 clients lands in the
+paper's observed 280-580 g/round band (Tables I/II).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+I_BASE = 150.0  # gCO2/kWh (paper)
+I_AMP = 70.0
+I_PERIOD_H = 24.0
+I_SIGMA = 8.0
+I_AVG = 150.0  # paper's Eq. 5 normalizer
+I_THRESHOLD = 100.0  # paper's Eq. 9 threshold
+
+# device model for the energy term.  The paper does not publish its energy
+# model; its Tables I/II numbers (FedAvg ~578 g/round over 10 clients at
+# I~150 g/kWh) imply ~0.385 kWh per client-round — far above bare-GPU
+# compute energy for a 4.8M-param model.  We therefore model each
+# participation as engaging an edge *node* (provisioning + host + accelerator
+# power) for a fixed setup window plus the compute time, and calibrate the
+# node power/setup so the FedAvg baseline reproduces the paper's band.  All
+# comparative claims (the % reductions) depend only on this model being held
+# fixed across variants, not on the calibration itself.  See EXPERIMENTS.md.
+DEVICE_POWER_W = 250.0        # accelerator share (P100-class client)
+DEVICE_PEAK_FLOPS = 9.3e12    # P100 fp32
+NODE_POWER_W = 10_000.0       # edge-node slice engaged per participation
+NODE_SETUP_S = 138.0          # provisioning window (calibrated, see above)
+ROUND_OVERHEAD_S = 25.0       # fixed per-round coordination time
+
+
+class ProviderFleet(NamedTuple):
+    """Vectorized resource-provider registry (Eq. 1): r_i = <C_i, N_i, E_i, L_i>."""
+
+    capability: jax.Array  # C_i — normalized compute capability, mean ~1.0
+    bandwidth: jax.Array   # N_i — Mbps-scale relative bandwidth
+    efficiency: jax.Array  # E_i — energy efficiency factor, mean ~1.0
+    phase: jax.Array       # L_i — region phase offset in [0, 2*pi)
+
+    @property
+    def n(self) -> int:
+        return self.capability.shape[0]
+
+
+def make_fleet(key, n: int, hetero: float = 0.35) -> ProviderFleet:
+    """Heterogeneous fleet; ``hetero`` scales the capability/efficiency spread."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    cap = jnp.clip(1.0 + hetero * jax.random.normal(k1, (n,)), 0.3, 2.0)
+    bw = jnp.clip(1.0 + hetero * jax.random.normal(k2, (n,)), 0.2, 3.0)
+    eff = jnp.clip(1.0 + hetero * jax.random.normal(k3, (n,)), 0.4, 2.0)
+    # regions: cluster providers into a few grid zones around the planet
+    zone = jax.random.randint(k4, (n,), 0, 8)
+    phase = zone.astype(jnp.float32) * (2 * jnp.pi / 8)
+    return ProviderFleet(cap, bw, eff, phase)
+
+
+def intensity(fleet: ProviderFleet, t_hours, key=None) -> jax.Array:
+    """Per-provider grid carbon intensity I_i(t) in gCO2/kWh (Eq. 8)."""
+    base = I_BASE + I_AMP * jnp.sin(2 * jnp.pi * t_hours / I_PERIOD_H + fleet.phase)
+    if key is not None:
+        base = base + I_SIGMA * jax.random.normal(key, (fleet.n,))
+    return jnp.maximum(base, 20.0)  # grids never hit zero
+
+
+def carbon_class(mean_intensity) -> jax.Array:
+    """Global carbon state C_t in {0: low, 1: medium, 2: high} (Eq. 2)."""
+    return jnp.where(mean_intensity < 120.0, 0, jnp.where(mean_intensity < 180.0, 1, 2)).astype(jnp.int32)
+
+
+def round_energy_kwh(fleet: ProviderFleet, round_flops: float) -> jax.Array:
+    """Energy per client for one local round, in kWh (see model note above)."""
+    seconds = round_flops / (fleet.capability * DEVICE_PEAK_FLOPS)
+    joules = seconds * DEVICE_POWER_W / fleet.efficiency
+    joules = joules + NODE_SETUP_S * NODE_POWER_W / fleet.efficiency
+    return joules / 3.6e6
+
+
+def round_emissions_g(fleet: ProviderFleet, selected, t_hours, round_flops: float, key=None):
+    """Total gCO2 for the selected client set this round.
+
+    ``selected``: bool (n,) participation mask.  Returns (total_g, per_client_g).
+    """
+    kwh = round_energy_kwh(fleet, round_flops)
+    inten = intensity(fleet, t_hours, key)
+    per = kwh * inten * selected.astype(jnp.float32)
+    return jnp.sum(per), per
+
+
+def round_duration_s(fleet: ProviderFleet, selected, round_flops: float, model_bytes: float):
+    """Synchronous-round wall time: slowest selected client (compute + 2x transfer).
+
+    Bandwidth is normalized so N_i = 1.0 ~ 100 Mbps.
+    """
+    compute = round_flops / (fleet.capability * DEVICE_PEAK_FLOPS)
+    transfer = 2.0 * model_bytes / (fleet.bandwidth * 100e6 / 8)
+    per = (compute + transfer) * selected.astype(jnp.float32)
+    return jnp.max(per) + ROUND_OVERHEAD_S

@@ -1,0 +1,40 @@
+"""Carbon-aware scheduling (paper §III-D, Eq. 9).
+
+    Priority(i, t) = Q(s_t, i) / max(1, I_i(t) / I_threshold)
+
+A provider on a grid above I_threshold = 100 gCO2/kWh has its priority
+divided by the excess ratio — aggregation "favours nodes powered by greener
+energy".  ``green_scores`` is the RL-free variant used by the Green-only
+ablation (random-ish orchestration, carbon-aware selection).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.carbon import I_THRESHOLD
+
+
+def priority(q_scores, intensity) -> jax.Array:
+    """Eq. 9. q_scores: (n,) Q(s_t, ·) (already green-corrected); intensity: (n,)."""
+    denom = jnp.maximum(1.0, intensity / I_THRESHOLD)
+    return q_scores / denom
+
+
+def green_scores(key, intensity) -> jax.Array:
+    """Green-only policy: carbon-aware score with random tie-breaking.
+
+    Uses 1/max(1, I/I_threshold) — Eq. 9 with a flat Q — plus uniform noise so
+    equally-green providers rotate (the paper's "random orchestration policy"
+    under carbon-aware selection).
+    """
+    base = 1.0 / jnp.maximum(1.0, intensity / I_THRESHOLD)
+    # 0.3-scale jitter rotates selection within the low-carbon cohort across
+    # rounds — strict argmax would starve data coverage (non-IID shards) by
+    # re-picking the same greenest k providers every round.
+    return base + 0.3 * jax.random.uniform(key, intensity.shape)
+
+
+def topk_mask(scores, k: int) -> jax.Array:
+    kth = jnp.sort(scores)[-k]
+    return scores >= kth

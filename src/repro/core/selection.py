@@ -1,0 +1,47 @@
+"""Client-selection policies — the paper's ablation grid (§IV-A).
+
+    rl_green : full MetaFed — MARL Q-scores, Eq. 5 green correction, Eq. 9
+               carbon-aware priority (the "RL + Green" configuration)
+    rl       : MARL orchestration without carbon awareness ("RL")
+    green    : carbon-aware selection with random orchestration ("Green")
+    random   : uniform k-subset — the FedAvg/FedProx/FedAdam baselines
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import carbon as carbon_mod
+from repro.core import orchestrator as orch
+from repro.core import scheduler
+
+
+def select_random(key, st, fleet, intensity, k):
+    scores = jax.random.uniform(key, (fleet.n,))
+    return scheduler.topk_mask(scores, k), st
+
+
+def select_green(key, st, fleet, intensity, k):
+    return scheduler.topk_mask(scheduler.green_scores(key, intensity), k), st
+
+
+def select_rl(key, st, fleet, intensity, k):
+    return orch.select(key, st, fleet, intensity, k, use_green=False, use_priority=False)
+
+
+def select_rl_green(key, st, fleet, intensity, k):
+    return orch.select(key, st, fleet, intensity, k, use_green=True, use_priority=True)
+
+
+POLICIES: dict[str, Callable] = {
+    "random": select_random,
+    "green": select_green,
+    "rl": select_rl,
+    "rl_green": select_rl_green,
+}
+
+
+def policy_uses_rl(name: str) -> bool:
+    return name in ("rl", "rl_green")

@@ -1,0 +1,102 @@
+"""Trace-time mesh context for activation sharding constraints.
+
+Model code is mesh-agnostic; launch code enters ``use_mesh(mesh)`` around
+tracing/lowering and the layers call :func:`constrain` on their big
+intermediates (attention scores, SSD chunk matrices, mLSTM gate matrices).
+Outside a mesh context — unit tests, the FL simulation — every constraint is
+a no-op.
+
+``constrain(x, entries)``: entries are per-dim mesh-axis names (or None for
+"leave unconstrained").  An axis is silently dropped when it does not divide
+the dim (e.g. 4 mLSTM heads on a 16-way model axis) — the caller's fallback
+dim takes over via :func:`constrain_either`.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar("repro_mesh", default=None)
+
+UNCON = P.UNCONSTRAINED
+
+
+_CONSTRAIN: contextvars.ContextVar[bool] = contextvars.ContextVar("repro_constrain", default=True)
+_BATCH_AXES: contextvars.ContextVar[Optional[tuple]] = contextvars.ContextVar(
+    "repro_batch_axes", default=None
+)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, activation_constraints: bool = True, batch_axes: Optional[tuple] = None):
+    """``activation_constraints=False`` (ddp strategy) disables the model-axis
+    constraints on attention scores etc. — the model axis is carrying batch.
+
+    ``batch_axes``: mesh axes carrying the model-code-visible batch dim-0
+    (prefill/decode paths).  None under the cohort-vmapped train step, where
+    vmap's spmd_axis_name owns the leading axis instead.
+    """
+    tok = _MESH.set(mesh)
+    tok2 = _CONSTRAIN.set(activation_constraints)
+    tok3 = _BATCH_AXES.set(batch_axes)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+        _CONSTRAIN.reset(tok2)
+        _BATCH_AXES.reset(tok3)
+
+
+def constrain_batch0(x):
+    """Constrain dim-0 to the declared batch axes (scatter/gather outputs in
+    the MoE dispatch lose batch sharding without this)."""
+    axes = _BATCH_AXES.get()
+    if axes is None:
+        return x
+    entries: list = [None] * x.ndim
+    entries[0] = tuple(axes) if len(axes) > 1 else axes[0]
+    return constrain(x, entries)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def _axis_ok(mesh: Mesh, axis, dim: int) -> bool:
+    names = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for n in names:
+        if n not in mesh.shape:
+            return False
+        size *= mesh.shape[n]
+    return dim % size == 0
+
+
+def constrain(x, entries: Sequence):
+    """Apply a partial sharding constraint; unspecified dims stay UNCONSTRAINED."""
+    mesh = _MESH.get()
+    if mesh is None or not _CONSTRAIN.get():
+        return x
+    assert len(entries) == x.ndim, (entries, x.shape)
+    spec = []
+    for dim, e in zip(x.shape, entries):
+        if e is not None and _axis_ok(mesh, e, dim):
+            spec.append(e)
+        else:
+            spec.append(UNCON)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_either(x, dim_a: int, dim_b: int, axis: str = "model"):
+    """Constrain ``dim_a`` on ``axis`` when divisible, else ``dim_b``."""
+    mesh = _MESH.get()
+    if mesh is None or not _CONSTRAIN.get():
+        return x
+    target = dim_a if _axis_ok(mesh, axis, x.shape[dim_a]) else dim_b
+    entries: list = [None] * x.ndim
+    entries[target] = axis
+    return constrain(x, entries)

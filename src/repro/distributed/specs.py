@@ -1,0 +1,200 @@
+"""Partition rules: parameters, inputs, and decode state onto the mesh.
+
+Philosophy: Megatron-style tensor parallelism over the "model" axis for the
+backbone weights, GSPMD auto-propagation for activations, cohorts (federated
+clients) over "data" (+"pod").  Rules are keyed on parameter-dict key names —
+the model substrate uses a stable naming convention precisely so these rules
+stay table-driven:
+
+    column-parallel (shard LAST dim):  wq wk wv w1 w3 w_up w_z in_proj lm_head
+    row-parallel   (shard dim -2):     wo w2 w_down out_proj
+    vocab-parallel (shard dim 0):      embed
+    replicated:                        norms, biases, gates, router, conv,
+                                       A_log/D/dt_bias, LoRA adapters, sLSTM
+                                       recurrences (all small)
+
+MoE expert weights (L, E, d, f) fall out of the same rules: experts stay
+unsharded on E, their FFN columns shard on "model" (the paper-faithful
+baseline; the expert-parallel all-to-all variant lives in the §Perf
+hillclimb).
+
+Decode state: KV caches shard batch on "data" and cache length on "model"
+(GSPMD inserts the softmax-reduction collectives); recurrent SSM/xLSTM states
+shard their head/feature dims on "model".  For ``long_500k`` (batch=1) the
+batch dim is unsharded and the window/state shards across everything
+available.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+
+COL_KEYS = {"w1", "w3", "in_z", "in_x", "in_dt", "conv_x", "lm_head"}
+ROW_KEYS = {"w2", "out_proj"}
+EMBED_KEYS = {"embed"}
+ATTN_Q_KEYS = {"wq", "wo"}
+ATTN_KV_KEYS = {"wk", "wv"}
+
+
+def _key_name(path_entry) -> str:
+    if isinstance(path_entry, jax.tree_util.DictKey):
+        return str(path_entry.key)
+    return str(path_entry)
+
+
+def param_spec(path, leaf, cfg: Optional[ModelConfig], model_size: int) -> P:
+    """PartitionSpec for one parameter leaf, from its dict-path name.
+
+    Attention projections are tensor-parallel on "model" ONLY when whole
+    heads land on shards (n_heads % model_size == 0; kv likewise) — sharding
+    mid-head forces GSPMD to all-reduce the full score tensor (measured:
+    7.5 GB/layer on qwen2's 14 heads).  Archs like qwen2/xlstm fall back to
+    replicated attention weights + context-parallel activations (see
+    attention.attend_full).  mLSTM q/k/v (path under "mlstm"/"slstm")
+    always replicate: 4 heads never divide a 16-way axis.
+    """
+    names = [_key_name(e) for e in path]
+    name = names[-1] if names else ""
+    shape = tuple(leaf.shape)
+    nd = len(shape)
+    in_lstm = any(n in ("mlstm", "slstm") for n in names)
+
+    def dim_spec(dim: int) -> P:
+        """Shard ``dim`` on "model" iff it divides evenly; else replicate
+        (pjit rejects uneven in_shardings — e.g. internvl2's vocab 151655)."""
+        if shape[dim] % model_size != 0:
+            return P()
+        spec = [None] * nd
+        spec[dim] = "model"
+        return P(*spec)
+
+    if name in EMBED_KEYS and nd == 2:
+        return dim_spec(0)
+    if not in_lstm and name in (ATTN_Q_KEYS | ATTN_KV_KEYS) and cfg is not None and nd >= 2:
+        heads = cfg.n_heads if name in ATTN_Q_KEYS else cfg.n_kv_heads
+        if heads % model_size == 0:
+            return dim_spec(nd - 2 if name == "wo" else nd - 1)
+        return P()
+    if name in COL_KEYS and nd >= 2 and not in_lstm:
+        return dim_spec(nd - 1)
+    if name in ROW_KEYS and nd >= 2 and not in_lstm:
+        return dim_spec(nd - 2)
+    return P()
+
+
+def params_shardings(params_shape: Any, mesh: Mesh, cfg: Optional[ModelConfig] = None):
+    """NamedShardings for a params pytree (of arrays or ShapeDtypeStructs)."""
+    model_size = mesh.shape.get("model", 1)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, cfg, model_size)),
+        params_shape,
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Mesh axes carrying the global batch / cohort dimension."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes
+
+
+def batch_spec(mesh: Mesh, global_batch: int, extra_dims: int) -> P:
+    """Shard dim-0 (batch) over pod+data when it divides; else replicate."""
+    axes = batch_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    first = axes if (axes and global_batch % total == 0) else None
+    if first is None and axes and global_batch % mesh.shape[axes[-1]] == 0:
+        first = axes[-1]  # fits the data axis alone (e.g. prefill_32k single-pod)
+    return P(first, *([None] * extra_dims))
+
+
+def input_shardings(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """Shardings matching configs.shapes.input_specs(cfg, shape)."""
+    B = shape.global_batch
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            return {
+                "patches": NamedSharding(mesh, batch_spec(mesh, B, 2)),
+                "tokens": NamedSharding(mesh, batch_spec(mesh, B, 1)),
+            }
+        if cfg.family == "audio":
+            return {
+                "frames": NamedSharding(mesh, batch_spec(mesh, B, 2)),
+                "targets": NamedSharding(mesh, batch_spec(mesh, B, 1)),
+                "mask": NamedSharding(mesh, batch_spec(mesh, B, 1)),
+            }
+        return {"tokens": NamedSharding(mesh, batch_spec(mesh, B, 1))}
+    return {"token": NamedSharding(mesh, batch_spec(mesh, B, 1))}
+
+
+# ---------------------------------------------------------------------------
+# Decode state
+# ---------------------------------------------------------------------------
+
+
+def _decode_leaf_spec(name: str, nd: int, batch_sharded, seq_axes) -> P:
+    """Spec for one decode-state leaf (leading stack dim already included)."""
+    b = batch_sharded or None  # tuple of axes, or None when batch unsharded
+    if name in ("k", "v"):
+        # (L, B, C, K, hd): cache length on model (+data when batch idle)
+        return P(None, b, seq_axes, None, None)
+    if name == "slot_pos":
+        return P(None, seq_axes)
+    if name == "h" and nd == 5:  # mamba (L, B, H, P, N)
+        return P(None, b, "model", None, None)
+    if name == "conv":  # (L, B, w, ch)
+        return P(None, b, None, "model")
+    if name == "C" and nd == 5:  # mlstm (L2, B, H, P, P)
+        return P(None, b, None, "model", None)
+    if name == "n" and nd == 4:  # mlstm n (L2, B, H, P)
+        return P(None, b, None, "model")
+    if nd == 3 and name in ("h", "c", "n", "m"):  # slstm (L2, B, d)
+        return P(None, b, "model")
+    return P()
+
+
+def decode_state_shardings(cfg: ModelConfig, shape: InputShape, mesh: Mesh, state_shape):
+    """Shardings for the decode-state pytree from transformer.init_decode_state."""
+    axes = batch_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    divisible = shape.global_batch % total == 0 and shape.global_batch >= total
+    batch_sharded = axes if divisible else False
+    seq_axes: Any = "model" if divisible else tuple(list(axes) + ["model"])
+
+    def spec(path, leaf):
+        name = _key_name(path[-1]) if path else ""
+        nd = len(leaf.shape)
+        if name == "pos":
+            return NamedSharding(mesh, P())
+        # hybrid: shared-attn cache nests under "shared"; mamba under "mamba".
+        # _decode_leaf_spec dispatches on (name, rank); a sanitizer then drops
+        # any entry whose dim doesn't divide its axes (pjit rejects uneven
+        # in_shardings — e.g. xlstm's 4 heads on the 16-way model axis).
+        s = _decode_leaf_spec(name, nd, batch_sharded, seq_axes)
+        entries = list(s) + [None] * (nd - len(s))
+        clean = []
+        for dim, e in zip(leaf.shape, entries):
+            if e is None:
+                clean.append(None)
+                continue
+            size = 1
+            for ax in (e if isinstance(e, tuple) else (e,)):
+                size *= mesh.shape[ax]
+            clean.append(e if dim % size == 0 else None)
+        return NamedSharding(mesh, P(*clean))
+
+    return jax.tree_util.tree_map_with_path(spec, state_shape)

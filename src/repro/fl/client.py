@@ -1,0 +1,111 @@
+"""Client-side local training (paper §III-C).
+
+One jitted function runs a client's whole local round — ``lax.scan`` over the
+stacked local batches — and returns the *model delta* (w_local - w_global),
+which is what every aggregation path (plain, masked-ring, Paillier) consumes.
+
+Supports the paper's client rules:
+  * FedAvg        — plain local SGD/momentum
+  * FedProx       — proximal term mu/2 ||w - w_t||^2 with MetaFed's adaptive
+                    mu_i = mu_base * (2.0 - C_i)  (Eq. 7)
+  * SCAFFOLD      — control-variate corrected gradients g + c - c_i
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+from repro.utils import PyTree, tree_scale, tree_sub, tree_zeros_like
+
+
+class LocalResult(NamedTuple):
+    delta: PyTree        # w_local - w_global
+    n_steps: jax.Array   # local step count (FedNova normalization)
+    loss_first: jax.Array
+    loss_last: jax.Array
+
+
+def make_local_trainer(loss_fn: Callable, opt: Optimizer) -> Callable:
+    """Build the jitted local-round function.
+
+    loss_fn(params, batch) -> (scalar, metrics dict).
+    Returned fn signature:
+        run(params_global, batches, mu, correction) -> LocalResult
+    ``batches``: dict of (n_steps, batch, ...) stacked arrays.
+    ``mu``: FedProx proximal coefficient (0 disables).
+    ``correction``: SCAFFOLD c - c_i pytree (zeros disable).
+    """
+
+    @functools.partial(jax.jit, static_argnames=())
+    def run(params_global, batches, mu, correction) -> LocalResult:
+        opt_state = opt.init(params_global)
+        n_steps = jax.tree.leaves(batches)[0].shape[0]
+
+        def step(carry, batch):
+            params, opt_state = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            grads = jax.tree.map(
+                lambda g, p, p0, c: g + mu * (p - p0) + c,
+                grads, params, params_global, correction,
+            )
+            params, opt_state = opt.update(params, grads, opt_state)
+            return (params, opt_state), loss
+
+        # NOTE: unrolled rather than lax.scan — XLA:CPU executes conv bodies
+        # ~13x slower inside while-loops (measured; see EXPERIMENTS.md §Notes).
+        # n_steps is static (fixed local step count), so the unroll is exact.
+        carry = (params_global, opt_state)
+        losses = []
+        for i in range(n_steps):
+            carry, loss = step(carry, jax.tree.map(lambda x: x[i], batches))
+            losses.append(loss)
+        params = carry[0]
+        delta = tree_sub(params, params_global)
+        return LocalResult(delta, jnp.int32(n_steps), losses[0], losses[-1])
+
+    return run
+
+
+def make_cohort_trainer(loss_fn: Callable, opt: Optimizer) -> Callable:
+    """Vectorized local training: the whole selected cohort in ONE jitted call.
+
+    This is both the CPU-simulation fast path (one dispatch per round, XLA
+    batches the per-client work) and the semantic template for the pod-scale
+    ``fl_train_step`` (cohorts vmapped over the mesh data axis — see
+    repro/launch/train.py).
+
+    run(params_global, batches, mus, corrections) with a leading cohort axis
+    on ``batches`` (k, n_steps, batch, ...), ``mus`` (k,), ``corrections``
+    (k-stacked pytree).  Returns a k-stacked LocalResult.
+    """
+    single = make_local_trainer(loss_fn, opt)
+
+    @jax.jit
+    def run(params_global, batches, mus, corrections):
+        return jax.vmap(lambda b, m, c: single(params_global, b, m, c))(
+            batches, mus, corrections
+        )
+
+    return run
+
+
+def zero_correction(params: PyTree) -> PyTree:
+    return tree_zeros_like(params, jnp.float32)
+
+
+def adaptive_mu(mu_base: float, capability) -> jax.Array:
+    """MetaFed Eq. 7: mu_i = mu_base * (2.0 - C_i) — weaker devices get a
+    stronger proximal pull (they run fewer/slower local steps)."""
+    return mu_base * (2.0 - capability)
+
+
+def scaffold_new_control(
+    c_i: PyTree, c: PyTree, delta: PyTree, n_steps, lr: float
+) -> PyTree:
+    """SCAFFOLD option II: c_i+ = c_i - c - delta / (K * lr)."""
+    scale = 1.0 / (jnp.maximum(n_steps.astype(jnp.float32), 1.0) * lr)
+    return jax.tree.map(lambda ci, cc, d: ci - cc - scale * d, c_i, c, delta)

@@ -1,0 +1,118 @@
+"""Pallas TPU flash attention: online-softmax blocked attention.
+
+TPU-native form of the FlashAttention insight (no GPU warp shuffles — the
+analogue is BlockSpec VMEM tiling + a grid dimension over KV blocks with
+running (m, l, acc) scratch carries):
+
+  grid = (batch*q_heads, T/block_q, S/block_k)   — k innermost, sequential
+  q tile   (block_q, hd)  in VMEM, revisited for every k block
+  k,v tile (block_k, hd)  in VMEM, streamed
+  scratch: m (block_q,), l (block_q,), acc (block_q, hd) — carried across
+  the k dimension, finalized (acc/l) on the last k block.
+
+Supports causal masking, sliding windows, GQA (kv-head index derived from
+the q-head grid index) and tanh logit capping — the exact contract of
+``ref.flash_attention_ref``.  Block sizes default to (128, 128): MXU-aligned
+(multiples of 128 in both tile dims; hd is padded to 128 by the wrapper).
+
+Validated in interpret mode on CPU (this container); on real TPU the same
+pallas_call lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, block_q: int, block_k: int, n_kb: int,
+    causal: bool, window: Optional[int], logit_cap: float, seq_k: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # (block_q, hd)
+    k = k_ref[0].astype(jnp.float32)  # (block_k, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    tpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    spos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = spos < seq_k  # padding
+    if causal:
+        mask &= spos <= tpos
+    if window is not None:
+        mask &= spos > tpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    # rows that are fully masked keep m = NEG_INF; exp(NEG_INF - NEG_INF)=1
+    # would pollute — zero those explicitly.
+    row_has = jnp.any(mask, axis=1)
+    p = jnp.where(row_has[:, None], p, 0.0)
+    corr = jnp.where(row_has, jnp.exp(m_prev - m_new), 1.0)
+
+    l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1)
+    acc_scr[...] = corr[:, None] * acc_scr[...] + jax.lax.dot(p, v)
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bh(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    logit_cap: float = 0.0, block_q: int = 128, block_k: int = 128,
+    group: int = 1, seq_k: Optional[int] = None, interpret: bool = True,
+):
+    """Core pallas_call. q: (BH, T, hd); k,v: (BK, S, hd); BH = BK * group."""
+    BH, T, hd = q.shape
+    S = k.shape[1]
+    seq_k = S if seq_k is None else seq_k
+    n_qb = pl.cdiv(T, block_q)
+    n_kb = pl.cdiv(S, block_k)
+    scale = hd**-0.5
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale, block_q=block_q, block_k=block_k, n_kb=n_kb,
+        causal=causal, window=window, logit_cap=logit_cap, seq_k=seq_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, iq, ik: (bh // group, ik, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bh, iq, ik: (bh // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused secure-aggregation unmask + dequantize.
+
+The server-side hot loop of MetaFed's homomorphic aggregation at pod scale:
+given the cohorts' masked (one-time-padded) quantized updates and the mask
+streams, produce the float mean update in one pass:
+
+    out = bitcast_int32( Σ_i masked_i − Σ_i mask_i  (mod 2^32) ) / scale
+
+For a 314B-parameter model this touches ~2.5 TB per round; the fusion avoids
+materializing the intermediate ring sum in HBM (memory-bound op — the win is
+one fewer full read+write of the parameter vector).
+
+Grid over parameter blocks; the (small) client axis is reduced inside the
+kernel.  Blocks are (n_clients, block_p) uint32 tiles in VMEM; block_p
+defaults to 2048 = 8 x 256 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _agg_kernel(masked_ref, masks_ref, o_ref, *, scale: float):
+    masked = masked_ref[...]  # (n, block_p) uint32
+    masks = masks_ref[...]
+    total = jnp.sum(masked, axis=0, dtype=jnp.uint32) - jnp.sum(masks, axis=0, dtype=jnp.uint32)
+    signed = jax.lax.bitcast_convert_type(total, jnp.int32)
+    o_ref[...] = signed.astype(jnp.float32) * jnp.float32(1.0 / scale)
+
+
+def masked_aggregate(masked, masks, clip: float, bits: int, *, block_p: int = 2048,
+                     interpret: bool = True):
+    """masked, masks: (n_clients, P) uint32 -> float32 (P,) decoded ring sum."""
+    n, P = masked.shape
+    scale = ((1 << (bits - 1)) - 1) / clip
+    n_pb = pl.cdiv(P, block_p)
+    pad = n_pb * block_p - P
+    if pad:
+        masked = jnp.pad(masked, ((0, 0), (0, pad)))
+        masks = jnp.pad(masks, ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        functools.partial(_agg_kernel, scale=scale),
+        grid=(n_pb,),
+        in_specs=[
+            pl.BlockSpec((n, block_p), lambda i: (0, i)),
+            pl.BlockSpec((n, block_p), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pb * block_p,), jnp.float32),
+        interpret=interpret,
+    )(masked, masks)
+    return out[:P]

@@ -1,0 +1,62 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Shape plumbing: (B, T, H, hd) model-layout attention -> (B*H, T, hd) kernel
+layout, GQA head mapping, head-dim padding to the 128-lane MXU width, and
+sequence padding to block multiples.  ``interpret`` defaults to True — this
+container is CPU-only; on TPU pass interpret=False (same kernel lowers to
+Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import masked_agg as ma
+from repro.utils import round_up
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_cap", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: Optional[int] = None,
+    logit_cap: float = 0.0, block_q: int = 128, block_k: int = 128,
+    interpret: bool = True,
+):
+    """Flash attention with GQA. q: (B, T, H, hd); k, v: (B, S, K, hd)."""
+    B, T, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    assert H % K == 0
+    group = H // K
+
+    hd_p = round_up(hd, 128)
+    T_p = round_up(T, block_q)
+    S_p = round_up(S, block_k)
+
+    def prep(x, L, Lp, heads):
+        x = jnp.pad(x, ((0, 0), (0, Lp - L), (0, 0), (0, hd_p - hd)))
+        return x.transpose(0, 2, 1, 3).reshape(B * heads, Lp, hd_p)
+
+    qk_scale_fix = (hd_p / hd) ** 0.5  # kernel scales by hd_p^-0.5 after padding
+    qbh = prep(q, T, T_p, H) * qk_scale_fix
+    kbh = prep(k, S, S_p, K)
+    vbh = prep(v, S, S_p, K)
+
+    out = fa.flash_attention_bh(
+        qbh, kbh, vbh, causal=causal, window=window, logit_cap=logit_cap,
+        block_q=block_q, block_k=block_k, group=group, seq_k=S, interpret=interpret,
+    )
+    out = out.reshape(B, H, T_p, hd_p).transpose(0, 2, 1, 3)
+    return out[:, :T, :, :hd].astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("clip", "bits", "block_p", "interpret"))
+def masked_aggregate(masked, masks, clip: float, bits: int, *, block_p: int = 2048,
+                     interpret: bool = True):
+    """Fused unmask+dequantize ring aggregation (see masked_agg.py)."""
+    return ma.masked_aggregate(masked, masks, clip, bits, block_p=block_p, interpret=interpret)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                        logit_cap: float = 0.0):
+    """Reference attention. q: (B, T, H, hd); k, v: (B, S, K, hd); GQA groups.
+
+    Identical contract to kernels.ops.flash_attention; fp32 softmax.
+    """
+    B, T, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, T, K, G, hd)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg.astype(jnp.float32), k.astype(jnp.float32)) * hd**-0.5
+    if logit_cap > 0.0:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    tpos = jnp.arange(T)[:, None]
+    spos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= spos <= tpos
+    if window is not None:
+        mask &= spos > tpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def masked_aggregate_ref(masked, masks, clip: float, bits: int):
+    """Reference fused unmask+dequantize.
+
+    masked, masks: (n_clients, P) uint32.  Returns float32 (P,):
+        decode( Σ masked - Σ masks  (mod 2^32) )
+    """
+    total = jnp.sum(masked, axis=0, dtype=jnp.uint32) - jnp.sum(masks, axis=0, dtype=jnp.uint32)
+    scale = ((1 << (bits - 1)) - 1) / clip
+    return total.astype(jnp.int32).astype(jnp.float32) / scale

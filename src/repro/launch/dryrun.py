@@ -1,0 +1,196 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combination.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init) — hence their position before this docstring.
+
+For each (architecture, input shape, mesh) this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs ShapeDtypeStruct inputs (no allocation) via configs.shapes,
+  3. jits the right step (fl_train_step / prefill_step / decode_step) with
+     explicit in_shardings, ``.lower()``s and ``.compile()``s it,
+  4. prints memory_analysis() + cost_analysis() and writes the roofline
+     report JSON to --out (resumable: existing files are skipped).
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k --mesh pod
+    python -m repro.launch.dryrun --all --mesh pod --out results/dryrun
+    python -m repro.launch.dryrun --all --mesh multipod
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import base as cfg_base
+from repro.distributed.context import use_mesh
+from repro.configs.shapes import SHAPES, InputShape, cfg_for_shape, input_specs, skip_reason
+from repro.launch import mesh as mesh_mod
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+from repro.roofline import analysis as roof
+
+
+def _mem_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "peak_bytes": float(
+                getattr(ma, "temp_size_in_bytes", 0)
+                + getattr(ma, "argument_size_in_bytes", 0)
+                + getattr(ma, "output_size_in_bytes", 0)
+                - getattr(ma, "alias_size_in_bytes", 0)
+            ),
+            "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+            "argument_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+            "generated_code_bytes": float(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception:
+        return {}
+
+
+def default_setup(cfg) -> train_mod.TrainSetup:
+    """Paper-faithful baseline setup (secure-agg on, adafactor server)."""
+    return train_mod.TrainSetup(
+        local_steps=1,
+        secure_agg=True,
+        sa_bits=16,
+        server_opt="adafactor",
+    )
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
+             setup: train_mod.TrainSetup | None = None, tag: str = "",
+             cfg_overrides: dict | None = None) -> dict:
+    cfg0 = cfg_base.get(arch)
+    if cfg_overrides:
+        cfg0 = dataclasses.replace(cfg0, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    label = f"{arch} x {shape_name} x {mesh_name}" + (f" [{tag}]" if tag else "")
+
+    skip = skip_reason(cfg0, shape)
+    if skip:
+        print(f"SKIP  {label}: {skip}")
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "skip": skip}
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fn = f"{arch}__{shape_name}__{mesh_name}.json"
+            with open(os.path.join(out_dir, fn), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    # unroll the layer stacks (exact per-layer collectives in the HLO text)
+    # and rematerialize activations (production memory policy at these sizes)
+    cfg0 = dataclasses.replace(cfg0, scan_layers=False, remat=True)
+    cfg = cfg_for_shape(cfg0, shape)
+    setup = setup or default_setup(cfg)
+    t0 = time.time()
+
+    from repro.distributed import specs as dspec
+
+    batch_axes = dspec.batch_axes(mesh) if shape.kind != "train" else None
+    if batch_axes and shape.global_batch % mesh.shape[batch_axes[-1]] != 0:
+        batch_axes = None  # long_500k: batch replicated
+    with mesh, use_mesh(
+        mesh,
+        activation_constraints=(setup.strategy != "ddp"),
+        batch_axes=batch_axes,
+    ):
+        if shape.kind == "train":
+            jitted, _ = train_mod.jit_train_step(cfg0, shape, mesh, setup)
+            p_shape, o_shape = train_mod.abstract_train_state(cfg, setup)
+            rng = jax.ShapeDtypeStruct((2,), np.dtype("uint32"))
+            lowered = jitted.lower(p_shape, o_shape, input_specs(cfg, shape), rng)
+        elif shape.kind == "prefill":
+            jitted, _ = serve_mod.jit_prefill_step(cfg0, shape, mesh)
+            lowered = jitted.lower(serve_mod.abstract_params(cfg), input_specs(cfg, shape))
+        else:  # decode
+            jitted, _ = serve_mod.jit_decode_step(cfg0, shape, mesh)
+            lowered = jitted.lower(
+                serve_mod.abstract_params(cfg),
+                input_specs(cfg, shape)["token"],
+                serve_mod.abstract_decode_state(cfg, shape),
+            )
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = dict(compiled.cost_analysis() or {})
+    mem = _mem_stats(compiled)
+    hlo = compiled.as_text()
+    report = roof.analyze(
+        cfg, shape, mesh_name, mesh.size, cost, hlo, mem, setup.local_steps
+    )
+    print(
+        f"OK    {label}: lower={t_lower:.1f}s compile={t_compile:.1f}s "
+        f"flops/dev={report.flops_per_device:.3e} hbm/dev={report.hbm_bytes_per_device:.3e} "
+        f"ici/dev={report.ici_traffic_per_device:.3e} peakmem={mem.get('peak_bytes',0)/2**30:.2f}GiB "
+        f"dominant={report.dominant}"
+    )
+    print(f"      memory_analysis: {mem}")
+    print(f"      cost_analysis: flops={cost.get('flops')} bytes={cost.get('bytes accessed')}")
+    d = report.to_dict()
+    d["mem"] = mem
+    d["lower_s"] = t_lower
+    d["compile_s"] = t_compile
+    d["tag"] = tag
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{arch}__{shape_name}__{mesh_name}{('__' + tag) if tag else ''}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(d, f, indent=1)
+    return d
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (see configs)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true", help="run every (arch, shape)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--resume", action="store_true", help="skip pairs with existing JSON")
+    args = ap.parse_args()
+
+    archs = cfg_base.ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                fn = os.path.join(args.out, f"{arch}__{shape_name}__{mesh_name}.json")
+                if args.resume and os.path.exists(fn):
+                    print(f"CACHED {arch} x {shape_name} x {mesh_name}")
+                    continue
+                try:
+                    run_pair(arch, shape_name, multi, args.out)
+                except Exception as e:
+                    failures.append((arch, shape_name, mesh_name, repr(e)))
+                    print(f"FAIL  {arch} x {shape_name} x {mesh_name}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f)
+        sys.exit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

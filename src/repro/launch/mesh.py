@@ -1,0 +1,32 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set
+XLA_FLAGS before jax initializes, and the smoke tests must see 1 device.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis is the
+hierarchical-FedAvg axis (pod-local aggregate, then cross-pod aggregate —
+MetaFed's edge->cloud topology; see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The federated-aggregation axes of a mesh (cohorts live here)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def n_cohorts(mesh) -> int:
+    out = 1
+    for a in data_axes(mesh):
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,72 @@
+"""Pod-scale serving steps: prefill (full-sequence forward) and decode.
+
+These are the inference artifacts the dry-run lowers for the
+``prefill_32k`` / ``decode_32k`` / ``long_500k`` shapes:
+
+  * ``prefill_step``  — batched full-sequence forward returning logits
+    (encoder-only archs: the masked-prediction forward).
+  * ``decode_step``   — ONE new token against a KV cache / recurrent state
+    of the shape's ``seq_len``, exactly ``transformer.decode_step``.
+
+Sharding: batch over ("pod","data") when it divides; KV-cache length (or
+recurrent head dims) over "model" — GSPMD inserts the flash-style softmax
+reduction collectives for the cache-sharded attention (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape, cfg_for_shape, input_specs
+from repro.distributed import specs as dspec
+from repro.models import transformer
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, batch):
+        logits, _ = transformer.forward(params, cfg, batch)
+        return logits
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode(params, token, state):
+        return transformer.decode_step(params, cfg, token, state)
+
+    return decode
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: transformer.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: InputShape):
+    return jax.eval_shape(
+        lambda: transformer.init_decode_state(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def jit_prefill_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    cfg = cfg_for_shape(cfg, shape)
+    step = make_prefill_step(cfg)
+    p_shape = abstract_params(cfg)
+    p_shard = dspec.params_shardings(p_shape, mesh, cfg)
+    b_shard = dspec.input_shardings(cfg, shape, mesh)
+    return jax.jit(step, in_shardings=(p_shard, b_shard)), (p_shard, b_shard)
+
+
+def jit_decode_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    cfg = cfg_for_shape(cfg, shape)
+    step = make_decode_step(cfg)
+    p_shape = abstract_params(cfg)
+    p_shard = dspec.params_shardings(p_shape, mesh, cfg)
+    t_shard = dspec.input_shardings(cfg, shape, mesh)["token"]
+    s_shape = abstract_decode_state(cfg, shape)
+    s_shard = dspec.decode_state_shardings(cfg, shape, mesh, s_shape)
+    jitted = jax.jit(step, in_shardings=(p_shard, t_shard, s_shard), donate_argnums=(2,))
+    return jitted, (p_shard, t_shard, s_shard)

@@ -1,0 +1,292 @@
+"""Pod-scale federated training step (the artifact the dry-run lowers).
+
+One ``fl_train_step`` = one MetaFed communication round mapped onto the mesh
+(DESIGN.md §2):
+
+  1. the global batch is split into ``n_cohorts`` client cohorts, sharded
+     over the ("pod", "data") axes; model weights are tensor-parallel over
+     "model" and replicated across cohorts;
+  2. every cohort runs ``local_steps`` of local SGD (vmapped; lax.scan over
+     steps) — FedProx's proximal pull against the round-start weights
+     included when enabled (mu > 0);
+  3. each cohort's model delta is L2-clipped (DP sensitivity bound),
+     fixed-point quantized, and one-time-pad masked **per leaf** in the
+     uint32 ring;
+  4. the sum over the cohort axis lowers to an *integer all-reduce over the
+     data (+pod) axes* — the secure aggregation of Eq. 6 executed
+     homomorphically by the interconnect;
+  5. a second integer all-reduce carries the mask sum (dealer scheme;
+     see privacy/secure_agg.py) for unmasking; then dequantize, add the
+     calibrated DP Gaussian noise, and apply the server optimizer.
+
+Every step of the paper's pipeline is therefore visible in the lowered HLO:
+the masked aggregation is the dominant collective, and its cost is exactly
+what §Roofline's collective term measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape, cfg_for_shape, input_specs
+from repro.distributed import specs as dspec
+from repro.launch import mesh as mesh_mod
+from repro.models import transformer
+from repro.optim import optimizers as opt_mod
+from repro.privacy import quantize
+from repro.utils import PyTree, fold_in_str, tree_sub
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSetup:
+    """Static configuration of the pod-scale federated round."""
+
+    local_steps: int = 1          # local SGD steps per cohort per round
+    local_lr: float = 0.02
+    prox_mu: float = 0.0          # FedProx (0 = FedAvg)
+    secure_agg: bool = True       # masked-ring aggregation (paper mode)
+    sa_bits: int = 16             # quantization width (16 leaves headroom for 2^16 cohorts)
+    sa_clip: float = 1.0          # per-cohort delta L2 clip (= DP sensitivity)
+    dp_sigma: float = 0.0         # DP noise multiplier (0 = off)
+    server_opt: str = "adafactor" # adafactor|adam|sgd — server optimizer
+    server_lr: float = 0.5
+    # --- §Perf hillclimb variants (paper-faithful baseline: tp + collective) ---
+    strategy: str = "tp"          # "tp": Megatron TP over "model";
+                                  # "ddp": replicate params, shard the within-
+                                  # cohort batch over "model" too (small archs)
+    mask_sum_local: bool = False  # regenerate the mask sum from the dealer
+                                  # seeds on every device instead of a second
+                                  # integer all-reduce (halves secure-agg ICI)
+
+
+def _server_optimizer(setup: TrainSetup):
+    if setup.server_opt == "adam":
+        return opt_mod.adam(setup.server_lr, b1=0.9, b2=0.99, eps=1e-3)
+    if setup.server_opt == "sgd":
+        return opt_mod.sgd(setup.server_lr)
+    return opt_mod.adafactor(setup.server_lr)
+
+
+def _split_cohorts(batch: PyTree, n_cohorts: int) -> PyTree:
+    return jax.tree.map(
+        lambda x: x.reshape((n_cohorts, x.shape[0] // n_cohorts) + x.shape[1:]), batch
+    )
+
+
+def _local_round(params, cohort_batch, cfg: ModelConfig, setup: TrainSetup):
+    """One cohort's local training: ``local_steps`` SGD steps. Returns delta."""
+
+    def loss(p, b):
+        total, m = transformer.loss_fn(p, cfg, b)
+        if setup.prox_mu > 0.0:
+            prox = sum(
+                jnp.sum(jnp.square((a - b_).astype(jnp.float32)))
+                for a, b_ in zip(jax.tree.leaves(p), jax.tree.leaves(params))
+            )
+            total = total + 0.5 * setup.prox_mu * prox
+        return total, m
+
+    def step(p, _):
+        (l, m), g = jax.value_and_grad(loss, has_aux=True)(p, cohort_batch)
+        p = jax.tree.map(lambda pi, gi: (pi - setup.local_lr * gi).astype(pi.dtype), p, g)
+        return p, (l, m["acc"])
+
+    local, (losses, accs) = jax.lax.scan(step, params, None, length=setup.local_steps)
+    return tree_sub(local, params), losses[-1], accs[-1]
+
+
+def _clip_tree(delta: PyTree, clip: float) -> PyTree:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(delta))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: x * scale, delta)
+
+
+def _masked_encode(delta: PyTree, key, clip: float, bits: int):
+    """Per-leaf quantize + one-time-pad mask. Returns (masked, masks) uint32 trees."""
+
+    def enc(path, leaf):
+        kk = fold_in_str(key, "/".join(str(p) for p in path))
+        q = quantize.encode(leaf, clip, bits)
+        m = jax.random.bits(kk, leaf.shape, jnp.uint32)
+        return q + m, m
+
+    pairs = jax.tree_util.tree_map_with_path(enc, delta)
+    masked = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    masks = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda t: isinstance(t, tuple))
+    return masked, masks
+
+
+def _cohort_axes():
+    """Mesh axes for vmap's spmd_axis_name (trace-time; None outside a mesh)."""
+    from repro.distributed.context import current_mesh
+
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _regen_mask_sum(params_like: PyTree, cohort_keys, n_cohorts: int) -> PyTree:
+    """Σ_i PRG(seed_i) per leaf, regenerated locally (mask_sum_local variant).
+
+    Must reproduce exactly what each cohort added in ``_masked_encode``:
+    same fold-in path strings, same threefry streams.
+    """
+
+    def leaf_sum(path, leaf):
+        pstr = "/".join(str(p) for p in path)
+        tot = jnp.zeros(leaf.shape, jnp.uint32)
+        for i in range(n_cohorts):
+            kk = fold_in_str(cohort_keys[i], pstr)
+            tot = tot + jax.random.bits(kk, leaf.shape, jnp.uint32)
+        return tot
+
+    return jax.tree_util.tree_map_with_path(leaf_sum, params_like)
+
+
+def make_fl_train_step(cfg: ModelConfig, setup: TrainSetup, n_cohorts: int):
+    """Build the (unjitted) train_step; caller jits with mesh shardings.
+
+    Signature: train_step(params, opt_state, batch, rng)
+             -> (params, opt_state, metrics)
+    """
+    server = _server_optimizer(setup)
+
+    def train_step(params, opt_state, batch, rng):
+        cohorts = _split_cohorts(batch, n_cohorts)
+        cohort_keys = jax.random.split(rng, n_cohorts)
+
+        def per_cohort(cb, key):
+            delta, loss, acc = _local_round(params, cb, cfg, setup)
+            if not setup.secure_agg:
+                return delta, loss, acc
+            delta = _clip_tree(delta, setup.sa_clip)
+            masked, masks = _masked_encode(delta, key, setup.sa_clip, setup.sa_bits)
+            if setup.mask_sum_local:
+                return masked, loss, acc  # masks regenerated server-side
+            return (masked, masks), loss, acc
+
+        # spmd_axis_name pins the cohort axis of every vmapped intermediate to
+        # the data/pod mesh axes — without it GSPMD may replicate per-cohort
+        # activations across the cohort dimension.
+        out, losses, accs = jax.vmap(per_cohort, spmd_axis_name=_cohort_axes())(
+            cohorts, cohort_keys
+        )
+
+        if setup.secure_agg:
+            if setup.mask_sum_local:
+                masked = out
+                # §Perf variant: the dealer seeds are public to the server, so
+                # every device can regenerate Σ_i mask_i locally — trades the
+                # second integer all-reduce for n_cohorts x PRG compute.
+                mask_sum = _regen_mask_sum(params, cohort_keys, n_cohorts)
+            else:
+                masked, masks = out
+                mask_sum = jax.tree.map(lambda m: jnp.sum(m, axis=0, dtype=jnp.uint32), masks)
+            # integer all-reduce over the cohort axis (data/pod collective):
+            ring_sum = jax.tree.map(lambda m: jnp.sum(m, axis=0, dtype=jnp.uint32), masked)
+            mean_delta = jax.tree.map(
+                lambda s, ms, p: (
+                    quantize.decode_sum(s - ms, setup.sa_clip, setup.sa_bits, n_cohorts)
+                    / n_cohorts
+                ).astype(jnp.float32),
+                ring_sum, mask_sum, params,
+            )
+        else:
+            mean_delta = jax.tree.map(lambda d: jnp.mean(d, axis=0), out)
+
+        if setup.dp_sigma > 0.0:
+            nk = jax.random.fold_in(rng, 7)
+            mean_delta = jax.tree_util.tree_map_with_path(
+                lambda path, d: d
+                + (setup.dp_sigma * setup.sa_clip / n_cohorts)
+                * jax.random.normal(
+                    fold_in_str(nk, "/".join(map(str, path))), d.shape, jnp.float32
+                ),
+                mean_delta,
+            )
+
+        # server optimizer on the pseudo-gradient
+        grads = jax.tree.map(lambda d, p: (-d).astype(jnp.float32), mean_delta, params)
+        new_params, new_opt = server.update(params, grads, opt_state)
+        metrics = {"loss": jnp.mean(losses), "acc": jnp.mean(accs)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Jit + shardings plumbing (used by dryrun.py and the real launcher)
+# ---------------------------------------------------------------------------
+
+
+def abstract_train_state(cfg: ModelConfig, setup: TrainSetup):
+    """ShapeDtypeStructs of (params, opt_state) without allocating."""
+    server = _server_optimizer(setup)
+
+    def build():
+        p = transformer.init_model(jax.random.PRNGKey(0), cfg)
+        return p, server.init(p)
+
+    return jax.eval_shape(build)
+
+
+def jit_train_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh, setup: TrainSetup):
+    """Returns (jitted step, example in_shardings dict) for lower()."""
+    cfg = cfg_for_shape(cfg, shape)
+    n_cohorts = mesh_mod.n_cohorts(mesh)
+    step = make_fl_train_step(cfg, setup, n_cohorts)
+
+    p_shape, o_shape = abstract_train_state(cfg, setup)
+    if setup.strategy == "ddp":
+        # §Perf variant for sub-1B archs: replicate weights, shard the within-
+        # cohort batch over "model" too — per-layer TP all-reduces disappear,
+        # one params-sized gradient all-reduce appears.
+        per_cohort_b = shape.global_batch // n_cohorts
+        if per_cohort_b % mesh.shape["model"] != 0:
+            raise ValueError("ddp strategy: per-cohort batch must divide the model axis")
+        p_shard = jax.tree.map(lambda _: NamedSharding(mesh, P()), p_shape)
+        b_shard = jax.tree.map(
+            lambda s: NamedSharding(
+                mesh, P(tuple(dspec.batch_axes(mesh)) + ("model",), *([None] * (len(s.shape) - 1)))
+            ),
+            input_specs(cfg, shape),
+        )
+    else:
+        p_shard = dspec.params_shardings(p_shape, mesh, cfg)
+        b_shard = dspec.input_shardings(cfg, shape, mesh)
+    # optimizer state leaves mirroring param shapes get the param's sharding
+    o_shard = _opt_state_shardings(o_shape, p_shape, p_shard, mesh)
+    r_shard = NamedSharding(mesh, P())
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, o_shard, b_shard, r_shard),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (p_shard, o_shard, b_shard, r_shard)
+
+
+def _opt_state_shardings(o_shape, p_shape, p_shard, mesh: Mesh):
+    """Match optimizer-state leaves to parameter shardings by shape equality."""
+    p_leaves = jax.tree.leaves(p_shape)
+    s_leaves = jax.tree.leaves(p_shard)
+    by_shape: dict[tuple, Any] = {}
+    for pl_, sl in zip(p_leaves, s_leaves):
+        by_shape.setdefault(tuple(pl_.shape), sl)
+
+    def pick(leaf):
+        return by_shape.get(tuple(leaf.shape), NamedSharding(mesh, P()))
+
+    return jax.tree.map(pick, o_shape)

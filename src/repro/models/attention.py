@@ -1,0 +1,263 @@
+"""Grouped-query attention: full-sequence training path and cached decode path.
+
+Supports every attention variant among the assigned architectures:
+  * GQA with any (n_heads, n_kv_heads) split           (all)
+  * qkv projection bias                                 (qwen2, internvl2)
+  * per-head q/k RMSNorm ("qk_norm")                    (qwen3)
+  * sliding-window attention                            (mixtral; beyond-paper
+    long-context decode variant for the dense archs)
+  * tanh logit soft-capping                             (grok-1)
+  * bidirectional (encoder-only) masking                (hubert)
+
+The decode path is a ring-buffer KV cache: for full-context decode the buffer
+covers the whole sequence; for sliding-window decode it covers only the
+window, so a 524k-token context decodes with O(window) memory.  Slot->absolute
+-position bookkeeping (``slot_pos``) makes masking exact in both cases.
+
+A Pallas flash-attention kernel (``repro.kernels.flash_attention``) implements
+the same contract for the TPU hot path and is oracle-checked against
+``attend_full`` below; this module is the reference/XLA path used by default.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, cdt, fanin_init, normal_init, pdt, rms_norm, softcap
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, n_stack: Optional[int] = None, d_in: Optional[int] = None):
+    """Attention parameter dict; ``n_stack`` adds a leading layer axis.
+
+    ``d_in`` overrides the input width (zamba2's shared block consumes the
+    concat of hidden state and initial embedding, i.e. 2*d_model).
+    """
+    d = d_in or cfg.d_model
+    hd = cfg.resolved_head_dim
+    stack = (n_stack,) if n_stack else ()
+    ks = jax.random.split(key, 8)
+    dt = pdt(cfg)
+    p = {
+        "wq": fanin_init(ks[0], (*stack, d, cfg.q_dim), dt),
+        "wk": fanin_init(ks[1], (*stack, d, cfg.kv_dim), dt),
+        "wv": fanin_init(ks[2], (*stack, d, cfg.kv_dim), dt),
+        "wo": fanin_init(ks[3], (*stack, cfg.q_dim, cfg.d_model), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((*stack, cfg.q_dim), dt)
+        p["bk"] = jnp.zeros((*stack, cfg.kv_dim), dt)
+        p["bv"] = jnp.zeros((*stack, cfg.kv_dim), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((*stack, hd), dt)
+        p["k_norm"] = jnp.ones((*stack, hd), dt)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    """x: (B, T, d_in) -> q (B,T,H,hd), k,v (B,T,K,hd), roped + normed."""
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = cdt(cfg)
+    q = jnp.einsum("btd,df->btf", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,df->btf", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,df->btf", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, T, cfg.n_heads, hd)
+    k = k.reshape(B, T, cfg.n_kv_heads, hd)
+    v = v.reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"].astype(dt))
+        k = rms_norm(k, p["k_norm"].astype(dt))
+    if cfg.causal:  # rope only on decoder stacks; hubert uses sinusoidal abs pos
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attend_full(q, k, v, *, causal: bool, window: Optional[int], logit_cap: float,
+                q_offset=0, probs_bf16: bool = False):
+    """Reference attention. q: (B,Tq,H,hd); k,v: (B,Tk,K,hd); GQA via repeat.
+
+    ``q_offset`` is the absolute position of q[0] relative to k[0] (decode /
+    chunked prefill). Contracts in fp32 for numerical parity with the kernel.
+
+    Distribution note: KV heads are repeated to the full H before the score
+    einsum so the head axis stays FLAT — GSPMD can then shard scores on H
+    whenever H divides the model axis (Megatron head parallelism), with a
+    fall-back to query-sequence sharding (context parallelism) for head
+    counts like qwen2's 14 or xLSTM's 4.  The repeat is local (KV weights
+    replicate across "model" when heads don't divide — see specs.py).
+    """
+    from repro.distributed.context import constrain_either
+
+    B, Tq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    scores = softcap(scores, logit_cap)
+    scores = constrain_either(scores, 1, 2)  # shard heads, else query blocks
+    tpos = q_offset + jnp.arange(Tq)[:, None]
+    spos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Tq, k.shape[1]), bool)
+    if causal:
+        mask &= spos <= tpos
+    if window is not None:
+        mask &= spos > tpos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = constrain_either(probs, 1, 2)
+    if probs_bf16:  # §Perf: halve probs HBM traffic into the PV matmul
+        probs = probs.astype(jnp.bfloat16)
+        out = jnp.einsum("bhts,bshd->bthd", probs, v.astype(jnp.bfloat16))
+    else:
+        out = jnp.einsum("bhts,bshd->bthd", probs, v.astype(jnp.float32))
+    return out.astype(v.dtype)
+
+
+def attend_banded(q, k, v, *, window: int, logit_cap: float, probs_bf16: bool = False):
+    """Banded sliding-window attention (beyond-paper §Perf optimization).
+
+    For causal SWA with window W and T >= 2W, queries in block i only see
+    keys in blocks i-1 and i (block size = W), so computing the full (T, S)
+    score matrix wastes T/(2W) x compute and memory.  This computes only the
+    diagonal band: scores are (B, H, nb, W, 2W) instead of (B, H, T, T) —
+    exact, not an approximation (masking inside the band reproduces the
+    causal+window predicate on absolute positions).
+
+    mixtral prefill_32k: T=32768, W=4096 -> 4x compute / 4x score-bytes cut.
+    """
+    from repro.distributed.context import constrain_either
+
+    B, T, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    W = window
+    nb = -(-T // W)
+    pad = nb * W - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(B, nb, W, H, hd)
+    kb = k.reshape(B, nb, W, H, hd)
+    vb = v.reshape(B, nb, W, H, hd)
+    # keys for block i = concat(block i-1, block i): (B, nb, 2W, H, hd)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_prev, kb], axis=2)
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+
+    scale = hd**-0.5
+    scores = jnp.einsum("bnthd,bnshd->bnhts", qb.astype(jnp.float32), k2.astype(jnp.float32)) * scale
+    scores = softcap(scores, logit_cap)
+    scores = constrain_either(scores, 2, 1)  # shard heads, else query blocks
+    # absolute positions: query t_abs = n*W + t; key s_abs = (n-1)*W + s
+    t_rel = jnp.arange(W)[:, None]
+    s_rel = jnp.arange(2 * W)[None, :] - W  # relative to the query block start
+    mask = (s_rel <= t_rel) & (s_rel > t_rel - W)
+    blk = jnp.arange(nb)[:, None, None]
+    valid_key = blk * W + s_rel >= 0  # (nb, W, 2W): block 0 has no predecessor
+    scores = jnp.where(mask[None, None, None] & valid_key[None, :, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    if probs_bf16:  # halve the band's HBM traffic for the PV matmul
+        probs = probs.astype(jnp.bfloat16)
+        v2 = v2.astype(jnp.bfloat16)
+    out = jnp.einsum("bnhts,bnshd->bnthd", probs, v2)
+    out = out.reshape(B, nb * W, H, hd)[:, :T].astype(jnp.float32)
+    return out.astype(v.dtype)
+
+
+def attention_forward(p, cfg: ModelConfig, x, positions=None, use_flash: bool = False):
+    """Full-sequence attention (training / prefill). x: (B, T, d_in)."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(T)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    W = cfg.sliding_window
+    if use_flash:
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(
+            q, k, v, causal=cfg.causal, window=W, logit_cap=cfg.attn_logit_softcap
+        )
+    elif cfg.banded_swa and cfg.causal and W is not None and T >= 2 * W:
+        out = attend_banded(q, k, v, window=W, logit_cap=cfg.attn_logit_softcap,
+                            probs_bf16=cfg.probs_bf16)
+    else:
+        out = attend_full(
+            q, k, v, causal=cfg.causal, window=W, logit_cap=cfg.attn_logit_softcap,
+            probs_bf16=cfg.probs_bf16,
+        )
+    return out.reshape(B, T, -1) @ p["wo"].astype(cdt(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Decode (ring-buffer KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_stack: Optional[int] = None):
+    """Cache pytree. ``max_len`` = full context, or window size under SWA."""
+    C = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    hd = cfg.resolved_head_dim
+    stack = (n_stack,) if n_stack else ()
+    dt = cdt(cfg)
+    return {
+        "k": jnp.zeros((*stack, batch, C, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((*stack, batch, C, cfg.n_kv_heads, hd), dt),
+        "slot_pos": jnp.full((*stack, C), -1, jnp.int32),
+    }
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache, pos):
+    """One-token decode. x: (B, 1, d_in); pos: scalar int32 absolute position.
+
+    Writes the new K/V into slot ``pos % C`` (ring buffer) and attends over
+    every slot whose recorded absolute position is valid, causal, and within
+    the sliding window.  Exact for both full-cache and windowed decode.
+    """
+    B = x.shape[0]
+    C = cache["k"].shape[-3]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+
+    slot = pos % C
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    slot_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0
+    )
+
+    hd = cfg.resolved_head_dim
+    K = cfg.n_kv_heads
+    G = cfg.n_heads // K
+    qg = q.reshape(B, K, G, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qg.astype(jnp.float32), k.astype(jnp.float32)) * hd**-0.5
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if cfg.sliding_window is not None:
+        valid &= slot_pos > pos - cfg.sliding_window
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.q_dim).astype(cdt(cfg))
+    y = out @ p["wo"].astype(cdt(cfg))
+    return y, {"k": k, "v": v, "slot_pos": slot_pos}

@@ -1,0 +1,34 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain MLP."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import act_fn, cdt, fanin_init, pdt
+
+
+def init_ffn(key, cfg: ModelConfig, n_stack: Optional[int] = None):
+    stack = (n_stack,) if n_stack else ()
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = pdt(cfg)
+    p = {
+        "w1": fanin_init(ks[0], (*stack, d, f), dt),
+        "w2": fanin_init(ks[1], (*stack, f, d), dt),
+    }
+    if cfg.gated:
+        p["w3"] = fanin_init(ks[2], (*stack, d, f), dt)
+    return p
+
+
+def ffn_forward(p, cfg: ModelConfig, x):
+    """x: (..., d_model) -> (..., d_model)."""
+    dt = cdt(cfg)
+    act = act_fn(cfg.act)
+    h = act(x @ p["w1"].astype(dt))
+    if cfg.gated:
+        h = h * (x @ p["w3"].astype(dt))
+    return h @ p["w2"].astype(dt)

@@ -1,0 +1,129 @@
+"""Foundational NN layers as init/apply pure-function pairs over dict pytrees.
+
+Conventions
+-----------
+* Parameters live in plain dicts of ``jnp.ndarray``; layer stacks carry a
+  leading layer axis and are consumed with ``jax.lax.scan`` so the lowered
+  HLO stays small (important: 1-core CPU compiles of 64-layer models).
+* ``cdt(cfg)`` is the compute dtype; params are stored in ``cfg.param_dtype``
+  and cast on use, matching standard mixed-precision TPU practice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def cdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, dtype, stddev=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def fanin_init(key, shape, dtype, scale=1.0):
+    """LeCun-normal on the penultimate axis (matmul contraction dim)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def zeros_init(_, shape, dtype, **kw):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_, shape, dtype, **kw):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6, plus_one: bool = False):
+    """RMSNorm in fp32 accumulations (TPU practice), cast back to x.dtype.
+
+    ``plus_one`` follows gemma's ``(1 + w)`` parameterization so zero-init
+    weights start as identity.
+    """
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = 1.0 + w
+    return (y * w).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (rotate-half form)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., T, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(T: int, d: int, dtype=jnp.float32):
+    """Classic sin/cos table for the encoder-only (hubert) stack."""
+    pos = jnp.arange(T, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    tab = jnp.zeros((T, d), jnp.float32)
+    tab = tab.at[:, 0::2].set(jnp.sin(pos * div))
+    tab = tab.at[:, 1::2].set(jnp.cos(pos * div))
+    return tab.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def softcap(x, cap: float):
+    """grok/gemma-style tanh soft-capping of logits; no-op when cap == 0."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN (mixtral / grok-1 style: softmax router, top-2).
+
+TPU adaptation (see DESIGN.md §4): instead of the GShard one-hot dispatch
+einsum — whose (tokens, experts, capacity) tensor is the classic HBM hog — we
+use a scatter/gather dispatch:
+
+  1. top-k expert ids per token,
+  2. position-in-expert via a cumsum over the one-hot assignment matrix
+     (tokens*k × E int32 — small),
+  3. scatter tokens into an (E*C+1, d) buffer (row E*C is the overflow row for
+     capacity-dropped tokens, matching GShard's token dropping semantics),
+  4. batched expert einsum over (E, C, d),
+  5. gather back and combine with renormalized gates.
+
+Expert FFN columns are tensor-parallel over the mesh "model" axis (the E axis
+is NOT sharded — see distributed/specs.py); an expert-parallel all-to-all
+variant is evaluated in the §Perf hillclimb.
+
+Returns the load-balancing auxiliary loss of Shazeer et al. / Switch:
+``aux = E * sum_e f_e * p_e`` with f the dispatch fraction, p the mean router
+probability.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import act_fn, cdt, fanin_init, pdt
+from repro.utils import cdiv
+
+
+def init_moe(key, cfg: ModelConfig, n_stack: Optional[int] = None):
+    stack = (n_stack,) if n_stack else ()
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ks = jax.random.split(key, 4)
+    dt = pdt(cfg)
+    p = {
+        "router": fanin_init(ks[0], (*stack, d, E), jnp.float32),  # router kept fp32
+        "w1": fanin_init(ks[1], (*stack, E, d, f), dt),
+        "w2": fanin_init(ks[2], (*stack, E, f, d), dt),
+    }
+    if cfg.gated:
+        p["w3"] = fanin_init(ks[3], (*stack, E, d, f), dt)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    return max(m.top_k, cdiv(int(m.capacity_factor * n_tokens * m.top_k), m.n_experts))
+
+
+def moe_forward_batched(p, cfg: ModelConfig, x):
+    """Batch-preserving dispatch (§Perf variant, ``cfg.moe_batched_dispatch``).
+
+    The flat (B*T, d) dispatch below collapses the batch axis, so GSPMD must
+    gather tokens across the data shards to build the expert buffers —
+    measured as a ~14 TB/device ICI storm on mixtral x prefill_32k.  Keeping
+    the B axis through dispatch (each batch row dispatches its own T tokens
+    with per-row capacity) keeps every tensor batch-sharded; capacity
+    dropping becomes per-row, which changes *which* tokens drop under
+    pressure but not the semantics (GShard groups were always arbitrary).
+    """
+    B, T, d = x.shape
+    m = cfg.moe
+    E, k = m.n_experts, m.top_k
+    C = capacity(cfg, T)
+    dt = cdt(cfg)
+    act = act_fn(cfg.act)
+
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)  # (B,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (B,T,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    flat_e = expert_idx.reshape(B, T * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (B, T*k, E)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=1) - 1, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < C
+    dest = jnp.where(keep, flat_e * C + pos, E * C)  # (B, T*k)
+
+    tok = jnp.repeat(jnp.arange(T), k)
+
+    def dispatch_row(dest_r, x_r):
+        return jnp.zeros((E * C + 1, d), dt).at[dest_r].add(x_r[tok].astype(dt))
+
+    from repro.distributed.context import constrain_batch0
+
+    buf = constrain_batch0(jax.vmap(dispatch_row)(dest, x))  # (B, E*C+1, d)
+    expert_in = buf[:, : E * C].reshape(B, E, C, d)
+
+    h = act(jnp.einsum("becd,edf->becf", expert_in, p["w1"].astype(dt)))
+    if cfg.gated:
+        h = h * jnp.einsum("becd,edf->becf", expert_in, p["w3"].astype(dt))
+    out = jnp.einsum("becf,efd->becd", h, p["w2"].astype(dt)).reshape(B, E * C, d)
+    out = constrain_batch0(jnp.concatenate([out, jnp.zeros((B, 1, d), dt)], axis=1))
+
+    gathered = constrain_batch0(jnp.take_along_axis(out, dest[..., None], axis=1))  # (B, T*k, d)
+    w = (gate_vals.reshape(B, T * k) * keep).astype(dt)
+    y = jnp.sum((gathered * w[..., None]).reshape(B, T, k, d), axis=2)
+
+    frac = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+    return y, aux
+
+
+def moe_forward(p, cfg: ModelConfig, x):
+    """x: (B, T, d) -> (y, aux_loss)."""
+    if cfg.moe_batched_dispatch:
+        return moe_forward_batched(p, cfg, x)
+    B, T, d = x.shape
+    m = cfg.moe
+    E, k = m.n_experts, m.top_k
+    S = B * T
+    C = capacity(cfg, S)
+    dt = cdt(cfg)
+    act = act_fn(cfg.act)
+
+    xf = x.reshape(S, d)
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (S, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # --- position-in-expert bookkeeping -----------------------------------
+    flat_e = expert_idx.reshape(-1)  # (S*k,) — row-major: token-major, slot-minor
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (S*k, E)
+    pos_in_e = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < C
+    dest = jnp.where(keep, flat_e * C + pos_in_e, E * C)  # overflow row E*C
+
+    # --- dispatch ----------------------------------------------------------
+    tok_idx = jnp.repeat(jnp.arange(S), k)
+    buf = jnp.zeros((E * C + 1, d), dt).at[dest].add(xf[tok_idx].astype(dt))
+    expert_in = buf[: E * C].reshape(E, C, d)
+
+    # --- expert compute (batched over E; f columns TP-sharded) -------------
+    h = act(jnp.einsum("ecd,edf->ecf", expert_in, p["w1"].astype(dt)))
+    if cfg.gated:
+        h = h * jnp.einsum("ecd,edf->ecf", expert_in, p["w3"].astype(dt))
+    out = jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(dt)).reshape(E * C, d)
+    out = jnp.concatenate([out, jnp.zeros((1, d), dt)], axis=0)  # overflow -> 0
+
+    # --- combine ------------------------------------------------------------
+    gathered = out[dest]  # (S*k, d)
+    w = (gate_vals.reshape(-1) * keep).astype(dt)
+    y = jnp.sum((gathered * w[:, None]).reshape(S, k, d), axis=1)
+
+    # --- load-balance aux loss ----------------------------------------------
+    frac_dispatch = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0
+    )  # top-1 dispatch fraction, per Switch
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_dispatch * mean_prob)
+    return y.reshape(B, T, d), aux

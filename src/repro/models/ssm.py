@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD) blocks — zamba2's backbone and the generic SSM layer.
+
+Training path: the chunked "state-space dual" algorithm of Dao & Gu (2024),
+expressed as einsums over chunks — TPU-native (big MXU contractions, no
+per-step kernel), with a tiny ``lax.scan`` only across chunk boundaries.
+
+Decode path: the O(1)-per-token recurrent update on an explicit
+(B, H, P, N) state plus a (B, conv-1, channels) causal-conv tail — this is
+what makes the ``long_500k`` shape lowerable for ssm/hybrid architectures.
+
+Discretization (as in the Mamba-2 reference):
+    a_t = exp(dt_t * A)            per head (A negative scalar),
+    h_t = a_t * h_{t-1} + dt_t * x_t ⊗ B_t
+    y_t = C_t · h_t + D * x_t
+with a single B/C group shared across heads (ngroups=1).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdt, fanin_init, pdt, rms_norm
+from repro.utils import cdiv
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm.headdim
+    return d_inner, n_heads, cfg.ssm.headdim, cfg.ssm.state
+
+
+def init_mamba(key, cfg: ModelConfig, n_stack: Optional[int] = None):
+    """Projections are stored per-component (z/x/B/C/dt and per-channel conv
+    weights) rather than one fused in_proj so each piece can take its natural
+    sharding: z/x/dt columns and the x-conv channels are tensor-parallel on
+    "model" (heads land whole on shards), B/C (state-space, N=64) replicate.
+    """
+    stack = (n_stack,) if n_stack else ()
+    d = cfg.d_model
+    d_in, H, P, N = ssm_dims(cfg)
+    ks = jax.random.split(key, 9)
+    dt = pdt(cfg)
+    return {
+        "ln": jnp.ones((*stack, d), dt),
+        "in_z": fanin_init(ks[0], (*stack, d, d_in), dt),
+        "in_x": fanin_init(ks[1], (*stack, d, d_in), dt),
+        "in_B": fanin_init(ks[2], (*stack, d, N), dt),
+        "in_C": fanin_init(ks[3], (*stack, d, N), dt),
+        "in_dt": fanin_init(ks[4], (*stack, d, H), dt),
+        "conv_x": fanin_init(ks[5], (*stack, cfg.ssm.conv, d_in), dt, scale=0.5),
+        "conv_B": fanin_init(ks[6], (*stack, cfg.ssm.conv, N), dt, scale=0.5),
+        "conv_C": fanin_init(ks[7], (*stack, cfg.ssm.conv, N), dt, scale=0.5),
+        "conv_bx": jnp.zeros((*stack, d_in), dt),
+        "conv_bB": jnp.zeros((*stack, N), dt),
+        "conv_bC": jnp.zeros((*stack, N), dt),
+        "A_log": jnp.zeros((*stack, H), jnp.float32),  # A = -exp(A_log) = -1 init
+        "D": jnp.ones((*stack, H), jnp.float32),
+        "dt_bias": jnp.zeros((*stack, H), jnp.float32),
+        "gnorm": jnp.ones((*stack, d_in), dt),
+        "out_proj": fanin_init(ks[8], (*stack, d_in, d), dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, T, ch); w: (width, ch)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is 4 — unrolled adds, fuses fine
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _segsum(a):
+    """a: (..., L). Returns S[..., i, j] = sum_{j < s <= i} a_s (lower-tri)."""
+    L = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    S = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, S, -jnp.inf)
+
+
+def ssd_chunked(xh, dtv, a, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh: (B, T, H, P) inputs per head;  dtv: (B, T, H) discretization steps;
+    a:  (B, T, H) log-decay increments (= dt * A, negative);
+    Bm, Cm: (B, T, N) input/output projections (single group).
+    Returns (y: (B, T, H, P), h_final: (B, H, P, N)).
+    """
+    Bsz, T, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = cdiv(T, chunk)
+    pad = nc * chunk - T
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lc = chunk
+
+    def rs(t, trailing):  # (B, T, ...) -> (B, nc, Lc, ...)
+        return t.reshape(Bsz, nc, Lc, *trailing)
+
+    xh_, dt_, a_ = rs(xh, (H, P)), rs(dtv, (H,)), rs(a, (H,))
+    B_, C_ = rs(Bm, (N,)), rs(Cm, (N,))
+
+    a_ = a_.astype(jnp.float32)
+    cum = jnp.cumsum(a_, axis=2)  # (B, nc, Lc, H)
+    # intra-chunk: y[t] += sum_{s<=t} exp(cum_t - cum_s) (C_t.B_s) dt_s x_s
+    L = jnp.exp(_segsum(jnp.moveaxis(a_, -1, -2)))  # (B, nc, H, Lc, Lc)
+    cb = jnp.einsum("bctn,bcsn->bcts", C_.astype(jnp.float32), B_.astype(jnp.float32))
+    xdt = xh_.astype(jnp.float32) * dt_[..., None]
+    y_intra = jnp.einsum("bcts,bchts,bcshp->bcthp", cb, L, xdt)
+
+    # chunk-final states: h_end[c] = sum_s exp(cum_end - cum_s) dt_s x_s B_s^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B, nc, Lc, H)
+    h_end = jnp.einsum("bcsh,bcshp,bcsn->bchpn", decay_to_end, xdt, B_.astype(jnp.float32))
+
+    # inter-chunk recurrence over nc (tiny scan)
+    total = jnp.exp(cum[:, :, -1, :])  # (B, nc, H) decay across each chunk
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        tot, he = inp  # (B,H), (B,H,P,N)
+        h_in = h  # state entering this chunk
+        h_out = tot[..., None, None] * h + he
+        return h_out, h_in
+
+    h_final, h_ins = jax.lax.scan(step, h0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(h_end, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)  # (B, nc, H, P, N)
+
+    # inter-chunk contribution: y[t] += exp(cum_t) * C_t . h_in[chunk(t)]
+    y_inter = jnp.einsum("bcth,bctn,bchpn->bcthp", jnp.exp(cum), C_.astype(jnp.float32), h_ins)
+
+    y = (y_intra + y_inter).reshape(Bsz, nc * Lc, H, P)[:, :T]
+    return y, h_final
+
+
+def mamba_forward(p, cfg: ModelConfig, x):
+    """Full-sequence Mamba-2 mixer. x: (B, T, d) -> (B, T, d)."""
+    from repro.distributed.context import constrain
+
+    Bsz, T, d = x.shape
+    d_in, H, P, N = ssm_dims(cfg)
+    dt = cdt(cfg)
+    h = rms_norm(x, p["ln"])
+    z = h @ p["in_z"].astype(dt)
+    xc = h @ p["in_x"].astype(dt)
+    Bm = h @ p["in_B"].astype(dt)
+    Cm = h @ p["in_C"].astype(dt)
+    dtv = h @ p["in_dt"].astype(dt)
+    xc = jax.nn.silu(_causal_conv(xc, p["conv_x"].astype(dt), p["conv_bx"].astype(dt)))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"].astype(dt), p["conv_bB"].astype(dt)))
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"].astype(dt), p["conv_bC"].astype(dt)))
+    xc = constrain(xc, (None, None, "model"))  # channels = whole SSM heads
+
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])  # (B, T, H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    a = dtv * A
+    xh = xc.reshape(Bsz, T, H, P)
+    y, _ = ssd_chunked(xh, dtv, a, Bm, Cm, cfg.ssm.chunk)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, T, d_in).astype(dt)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"])
+    return x + y @ p["out_proj"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_stack: Optional[int] = None):
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_ch = d_in + 2 * N
+    stack = (n_stack,) if n_stack else ()
+    return {
+        "h": jnp.zeros((*stack, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((*stack, batch, cfg.ssm.conv - 1, conv_ch), cdt(cfg)),
+    }
+
+
+def mamba_decode(p, cfg: ModelConfig, x, state):
+    """One-token recurrent step. x: (B, 1, d)."""
+    Bsz = x.shape[0]
+    d_in, H, P, N = ssm_dims(cfg)
+    dt = cdt(cfg)
+    h_in = rms_norm(x[:, 0], p["ln"])
+    z = h_in @ p["in_z"].astype(dt)
+    xc = h_in @ p["in_x"].astype(dt)
+    Bm = h_in @ p["in_B"].astype(dt)
+    Cm = h_in @ p["in_C"].astype(dt)
+    dtv = h_in @ p["in_dt"].astype(dt)
+
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)  # (B, ch)
+    window = jnp.concatenate([state["conv"], conv_in[:, None]], axis=1)  # (B, conv, ch)
+    conv_w = jnp.concatenate(
+        [p["conv_x"].astype(dt), p["conv_B"].astype(dt), p["conv_C"].astype(dt)], axis=-1
+    )
+    conv_b = jnp.concatenate(
+        [p["conv_bx"].astype(dt), p["conv_bB"].astype(dt), p["conv_bC"].astype(dt)], axis=-1
+    )
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, conv_w) + conv_b)
+    xc, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = jnp.exp(dtv * -jnp.exp(p["A_log"]))  # (B, H)
+    xh = xc.reshape(Bsz, H, P).astype(jnp.float32)
+    upd = (dtv[..., None] * xh)[..., None] * Bm.astype(jnp.float32)[:, None, None, :]  # (B,H,P,N)
+    h_new = a[..., None, None] * state["h"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32)) + p["D"][:, None] * xh
+    y = y.reshape(Bsz, d_in).astype(dt)
+    y = rms_norm(y * jax.nn.silu(z), p["gnorm"])
+    out = x[:, 0] + y @ p["out_proj"].astype(dt)
+    return out[:, None], {"h": h_new, "conv": window[:, 1:]}

@@ -1,0 +1,397 @@
+"""The composable model stack: every assigned architecture as one config.
+
+Families
+--------
+dense / moe / vlm  : pre-norm decoder blocks (attention + [Moe]FFN), scanned.
+audio              : encoder-only (bidirectional) blocks, masked prediction.
+ssm (xlstm=True)   : alternating sLSTM/mLSTM blocks, scanned in pairs.
+hybrid (zamba2)    : Mamba-2 backbone; a single *shared* attention+MLP block
+                     applied every ``shared_attn_every`` layers on
+                     concat(hidden, initial embedding), with per-site LoRA
+                     deltas on its q/k/v projections (Zamba2 style).
+
+All stacks keep layer parameters stacked on a leading axis and run under
+``jax.lax.scan`` so the lowered HLO is O(1) in depth; ``cfg.remat`` wraps the
+block body in ``jax.checkpoint`` for the big dry-run configurations.
+
+Public API
+----------
+init_model(key, cfg)                         -> params
+forward(params, cfg, batch, use_flash=False) -> (logits, aux)   [train/prefill]
+loss_fn(params, cfg, batch)                  -> (loss, metrics)
+init_decode_state(cfg, batch, max_len)       -> state
+decode_step(params, cfg, token, state)       -> (logits, state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.layers import cdt, normal_init, pdt, rms_norm, sinusoidal_positions, softcap
+from repro.utils import fold_in_str
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_model(key, cfg: ModelConfig):
+    dt = pdt(cfg)
+    p: dict[str, Any] = {
+        "embed": normal_init(fold_in_str(key, "embed"), (cfg.vocab, cfg.d_model), dt),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = normal_init(fold_in_str(key, "head"), (cfg.d_model, cfg.vocab), dt)
+    if cfg.frontend == "vision":
+        p["proj"] = normal_init(fold_in_str(key, "proj"), (cfg.frontend_dim, cfg.d_model), dt)
+    if cfg.frontend == "audio":
+        p["proj"] = normal_init(fold_in_str(key, "proj"), (cfg.frontend_dim, cfg.d_model), dt)
+        p["mask_emb"] = normal_init(fold_in_str(key, "maskemb"), (cfg.d_model,), dt)
+
+    L = cfg.n_layers
+    kb = fold_in_str(key, "blocks")
+    if cfg.xlstm:
+        assert L % 2 == 0, "xlstm stack scans (sLSTM, mLSTM) pairs"
+        p["slstm"] = xlstm_mod.init_slstm(fold_in_str(kb, "s"), cfg, n_stack=L // 2)
+        p["mlstm"] = xlstm_mod.init_mlstm(fold_in_str(kb, "m"), cfg, n_stack=L // 2)
+    elif cfg.family == "hybrid":
+        p["mamba"] = ssm_mod.init_mamba(fold_in_str(kb, "mamba"), cfg, n_stack=L)
+        n_sites = _n_sites(cfg)
+        p["shared_attn"] = attn.init_attention(fold_in_str(kb, "sattn"), cfg, d_in=2 * cfg.d_model)
+        p["shared_ffn"] = ffn_mod.init_ffn(fold_in_str(kb, "sffn"), cfg)
+        p["shared_ln1"] = jnp.ones((2 * cfg.d_model,), dt)
+        p["shared_ln2"] = jnp.ones((cfg.d_model,), dt)
+        r = cfg.shared_attn_lora_rank
+        for nm in ("q", "k", "v"):
+            p[f"lora_{nm}_a"] = normal_init(
+                fold_in_str(kb, f"la{nm}"), (n_sites, 2 * cfg.d_model, r), dt, stddev=0.02
+            )
+            dim = cfg.q_dim if nm == "q" else cfg.kv_dim
+            p[f"lora_{nm}_b"] = jnp.zeros((n_sites, r, dim), dt)
+    elif cfg.family == "ssm":
+        p["mamba"] = ssm_mod.init_mamba(fold_in_str(kb, "mamba"), cfg, n_stack=L)
+    else:  # dense / moe / vlm / audio — uniform attention blocks
+        blocks = {
+            "ln1": jnp.ones((L, cfg.d_model), dt),
+            "ln2": jnp.ones((L, cfg.d_model), dt),
+        }
+        blocks.update(attn.init_attention(fold_in_str(kb, "attn"), cfg, n_stack=L))
+        if cfg.family == "moe":
+            blocks.update(moe_mod.init_moe(fold_in_str(kb, "moe"), cfg, n_stack=L))
+        else:
+            blocks.update(ffn_mod.init_ffn(fold_in_str(kb, "ffn"), cfg, n_stack=L))
+        p["blocks"] = blocks
+    return p
+
+
+def _n_sites(cfg: ModelConfig) -> int:
+    if not cfg.shared_attn_every:
+        return 0
+    return -(-cfg.n_layers // cfg.shared_attn_every)  # site at the start of each segment
+
+
+# ---------------------------------------------------------------------------
+# Embedding & heads
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens):
+    x = jnp.take(p["embed"], tokens, axis=0).astype(cdt(cfg))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model**0.5, cdt(cfg))
+    return x
+
+
+def lm_logits(p, cfg: ModelConfig, h):
+    h = rms_norm(h, p["ln_f"])
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = h @ head.astype(cdt(cfg))
+    return softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward per family
+# ---------------------------------------------------------------------------
+
+
+def _scan_stack(block, carry, stacked, cfg: ModelConfig, length: int):
+    """Run ``block(carry, layer_params) -> (carry, None)`` over a layer stack,
+    via lax.scan (small HLO; CPU tests) or unrolled (dry-run: exact per-layer
+    collective accounting, XLA:CPU avoids its slow while-loop path)."""
+    if cfg.remat:
+        block = jax.checkpoint(block)
+    if cfg.scan_layers:
+        carry, _ = jax.lax.scan(block, carry, stacked)
+        return carry
+    for i in range(length):
+        carry, _ = block(carry, jax.tree.map(lambda a: a[i], stacked))
+    return carry
+
+
+def _dense_stack(p, cfg: ModelConfig, x, use_flash: bool):
+    """Uniform attention blocks under scan. Returns (h, moe_aux)."""
+
+    def block(carry, bp):
+        h, aux = carry
+        h = h + attn.attention_forward(bp, cfg, rms_norm(h, bp["ln1"]), use_flash=use_flash)
+        hn = rms_norm(h, bp["ln2"])
+        if cfg.family == "moe":
+            y, a = moe_mod.moe_forward(bp, cfg, hn)
+            h, aux = h + y, aux + a
+        else:
+            h = h + ffn_mod.ffn_forward(bp, cfg, hn)
+        return (h, aux), None
+
+    h, aux = _scan_stack(block, (x, jnp.float32(0.0)), p["blocks"], cfg, cfg.n_layers)
+    return h, aux / cfg.n_layers
+
+
+def _xlstm_stack(p, cfg: ModelConfig, x):
+    def pair(carry, bp):
+        h = xlstm_mod.slstm_forward(bp["s"], cfg, carry)
+        h = xlstm_mod.mlstm_forward(bp["m"], cfg, h)
+        return h, None
+
+    h = _scan_stack(pair, x, {"s": p["slstm"], "m": p["mlstm"]}, cfg, cfg.n_layers // 2)
+    return h, jnp.float32(0.0)
+
+
+def _shared_attn_block(p, cfg: ModelConfig, h, x0, site, use_flash: bool):
+    """Zamba2 shared block: attention+MLP over concat(h, x0) with site LoRA."""
+    cat = jnp.concatenate([h, x0], axis=-1)
+    cat = rms_norm(cat, p["shared_ln1"])
+    ap = dict(p["shared_attn"])
+    dt = cdt(cfg)
+    for nm, key in (("q", "wq"), ("k", "wk"), ("v", "wv")):
+        delta = p[f"lora_{nm}_a"][site].astype(dt) @ p[f"lora_{nm}_b"][site].astype(dt)
+        ap[key] = ap[key] + delta.astype(ap[key].dtype)
+    h = h + attn.attention_forward(ap, cfg, cat, use_flash=use_flash)
+    h = h + ffn_mod.ffn_forward(p["shared_ffn"], cfg, rms_norm(h, p["shared_ln2"]))
+    return h
+
+
+def _hybrid_stack(p, cfg: ModelConfig, x, use_flash: bool):
+    """Zamba2: mamba backbone + shared attention at segment starts."""
+    x0 = x
+    L, every = cfg.n_layers, cfg.shared_attn_every
+
+    def mamba_block(h, bp):
+        return ssm_mod.mamba_forward(bp, cfg, h), None
+
+    h = x
+    site = 0
+    for start in range(0, L, every):
+        end = min(start + every, L)
+        h = _shared_attn_block(p, cfg, h, x0, site, use_flash)
+        seg = jax.tree.map(lambda a: a[start:end], p["mamba"])
+        h = _scan_stack(mamba_block, h, seg, cfg, end - start)
+        site += 1
+    return h, jnp.float32(0.0)
+
+
+def _ssm_stack(p, cfg: ModelConfig, x):
+    def block(h, bp):
+        return ssm_mod.mamba_forward(bp, cfg, h), None
+
+    h = _scan_stack(block, x, p["mamba"], cfg, cfg.n_layers)
+    return h, jnp.float32(0.0)
+
+
+def _assemble_inputs(p, cfg: ModelConfig, batch):
+    """Family-specific input embedding. Returns (x, label_info)."""
+    dt = cdt(cfg)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(dt) @ p["proj"].astype(dt)  # (B, n_patch, d)
+        if cfg.scale_embed:
+            patches = patches * jnp.asarray(cfg.d_model**0.5, dt)
+        text = embed_tokens(p, cfg, batch["tokens"])
+        return jnp.concatenate([patches, text], axis=1)
+    if cfg.family == "audio":
+        x = batch["frames"].astype(dt) @ p["proj"].astype(dt)  # (B, T, d)
+        mask = batch["mask"]
+        x = jnp.where(mask[..., None], p["mask_emb"].astype(dt), x)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model, dt)[None]
+        return x
+    return embed_tokens(p, cfg, batch["tokens"])
+
+
+def forward(p, cfg: ModelConfig, batch, use_flash: bool = False):
+    """Full-sequence forward. Returns (logits fp32, moe_aux)."""
+    x = _assemble_inputs(p, cfg, batch)
+    if cfg.xlstm:
+        h, aux = _xlstm_stack(p, cfg, x)
+    elif cfg.family == "hybrid":
+        h, aux = _hybrid_stack(p, cfg, x, use_flash)
+    elif cfg.family == "ssm":
+        h, aux = _ssm_stack(p, cfg, x)
+    else:
+        h, aux = _dense_stack(p, cfg, x, use_flash)
+    return lm_logits(p, cfg, h), aux
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def _xent(logits, labels, mask):
+    """Token cross-entropy in fp32 with a small z-loss. logits: (B,T,V)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    zloss = 1e-4 * jnp.sum(jnp.square(logz) * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom
+    return loss + zloss, {"xent": loss, "acc": acc}
+
+
+def loss_fn(p, cfg: ModelConfig, batch, use_flash: bool = False):
+    """Family-aware training loss. Returns (scalar, metrics dict)."""
+    logits, aux = forward(p, cfg, batch, use_flash=use_flash)
+    if cfg.family == "audio":
+        # masked prediction: CE on corrupted frames only (HuBERT objective)
+        loss, m = _xent(logits, batch["targets"], batch["mask"].astype(jnp.float32))
+    elif cfg.family == "vlm":
+        # next-token prediction on the text segment only
+        text_logits = logits[:, cfg.n_patches :][:, :-1]
+        labels = batch["tokens"][:, 1:]
+        loss, m = _xent(text_logits, labels, jnp.ones_like(labels, jnp.float32))
+    else:
+        logits_, labels = logits[:, :-1], batch["tokens"][:, 1:]
+        loss, m = _xent(logits_, labels, jnp.ones_like(labels, jnp.float32))
+    total = loss + cfg.moe.aux_loss_weight * aux
+    m = dict(m, loss=total, moe_aux=aux)
+    return total, m
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    """Decode-state pytree + integer position. Family-dependent layout."""
+    if not cfg.supports_decode:
+        raise ValueError(f"{cfg.name} ({cfg.family}) has no autoregressive decode step")
+    L = cfg.n_layers
+    st: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.xlstm:
+        st["slstm"] = xlstm_mod.init_slstm_state(cfg, batch, n_stack=L // 2)
+        st["mlstm"] = xlstm_mod.init_mlstm_state(cfg, batch, n_stack=L // 2)
+    elif cfg.family == "hybrid":
+        st["mamba"] = ssm_mod.init_ssm_state(cfg, batch, n_stack=L)
+        st["shared"] = attn.init_kv_cache(cfg, batch, max_len, n_stack=_n_sites(cfg))
+    elif cfg.family == "ssm":
+        st["mamba"] = ssm_mod.init_ssm_state(cfg, batch, n_stack=L)
+    else:
+        st["cache"] = attn.init_kv_cache(cfg, batch, max_len, n_stack=L)
+    return st
+
+
+def _decode_scan(step, x, stacked, cfg: ModelConfig, length: int):
+    """Scan/unroll a per-layer decode step carrying hidden state and emitting
+    the updated per-layer cache: step(h, layer_xs) -> (h, new_layer_cache)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(step, x, stacked)
+    h, outs = x, []
+    for i in range(length):
+        h, out = step(h, jax.tree.map(lambda a: a[i], stacked))
+        outs.append(out)
+    return h, jax.tree.map(lambda *xs: jnp.stack(xs, 0), *outs)
+
+
+def decode_step(p, cfg: ModelConfig, token, state):
+    """token: (B, 1) int32 -> (logits (B, 1, V), new state). One position."""
+    pos = state["pos"]
+    x = embed_tokens(p, cfg, token)
+    if cfg.xlstm:
+
+        def pair(h, xs):
+            bp, ss, ms = xs
+            h, ss = xlstm_mod.slstm_decode(bp["s"], cfg, h, ss)
+            h, ms = xlstm_mod.mlstm_decode(bp["m"], cfg, h, ms)
+            return h, (ss, ms)
+
+        h, (ss, ms) = _decode_scan(
+            pair, x,
+            ({"s": p["slstm"], "m": p["mlstm"]}, state["slstm"], state["mlstm"]),
+            cfg, cfg.n_layers // 2,
+        )
+        new = dict(state, slstm=ss, mlstm=ms, pos=pos + 1)
+    elif cfg.family == "hybrid":
+        x0 = x
+        L, every = cfg.n_layers, cfg.shared_attn_every
+        h = x
+        caches = []
+        mamba_new: list = []
+
+        def mamba_step(h, xs):
+            bp, ms = xs
+            y, ms = ssm_mod.mamba_decode(bp, cfg, h, ms)
+            return y, ms
+
+        site = 0
+        for start in range(0, L, every):
+            h, cache_s = _shared_attn_decode(p, cfg, h, x0, site, state["shared"], pos)
+            caches.append(cache_s)
+            end = min(start + every, L)
+            seg_p = jax.tree.map(lambda a: a[start:end], p["mamba"])
+            seg_s = jax.tree.map(lambda a: a[start:end], state["mamba"])
+            h, seg_new = _decode_scan(mamba_step, h, (seg_p, seg_s), cfg, end - start)
+            mamba_new.append(seg_new)
+            site += 1
+        shared_cache = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *caches)
+        mamba_cat = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *mamba_new)
+        new = dict(state, shared=shared_cache, mamba=mamba_cat, pos=pos + 1)
+    elif cfg.family == "ssm":
+
+        def block(h, xs):
+            bp, ms = xs
+            return ssm_mod.mamba_decode(bp, cfg, h, ms)
+
+        h, mnew = _decode_scan(block, x, (p["mamba"], state["mamba"]), cfg, cfg.n_layers)
+        new = dict(state, mamba=mnew, pos=pos + 1)
+    else:
+
+        def block(h, xs):
+            bp, cache = xs
+            hn = rms_norm(h, bp["ln1"])
+            y, cache = attn.attention_decode(bp, cfg, hn, cache, pos)
+            h = h + y
+            hn = rms_norm(h, bp["ln2"])
+            if cfg.family == "moe":
+                y2, _ = moe_mod.moe_forward(bp, cfg, hn)
+            else:
+                y2 = ffn_mod.ffn_forward(bp, cfg, hn)
+            return h + y2, cache
+
+        h, cache = _decode_scan(block, x, (p["blocks"], state["cache"]), cfg, cfg.n_layers)
+        new = dict(state, cache=cache, pos=pos + 1)
+    return lm_logits(p, cfg, h), new
+
+
+def _shared_attn_decode(p, cfg: ModelConfig, h, x0, site, shared_cache, pos):
+    cat = jnp.concatenate([h, x0], axis=-1)
+    cat = rms_norm(cat, p["shared_ln1"])
+    ap = dict(p["shared_attn"])
+    dt = cdt(cfg)
+    for nm, key in (("q", "wq"), ("k", "wk"), ("v", "wv")):
+        delta = p[f"lora_{nm}_a"][site].astype(dt) @ p[f"lora_{nm}_b"][site].astype(dt)
+        ap[key] = ap[key] + delta.astype(ap[key].dtype)
+    cache = jax.tree.map(lambda a: a[site], shared_cache)
+    y, cache = attn.attention_decode(ap, cfg, cat, cache, pos)
+    h = h + y
+    h = h + ffn_mod.ffn_forward(p["shared_ffn"], cfg, rms_norm(h, p["shared_ln2"]))
+    return h, cache

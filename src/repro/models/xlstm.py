@@ -1,0 +1,218 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): sLSTM + mLSTM.
+
+The assigned ``xlstm-125m`` stacks alternating sLSTM/mLSTM blocks with no
+separate FFN (d_ff = 0 — the up/down projections live inside the mLSTM
+block, proj-factor 2).
+
+* **mLSTM** — matrix-memory LSTM.  Training uses the *parallel* stabilized
+  form (attention-like (T, T) gate-decay matrix); decode uses the O(1)
+  recurrent form on an explicit (C, n, m) state.  Both implement
+      C_t = f_t C_{t-1} + i_t v_t (k_t/√P)ᵀ,   h_t = C_t q_t / max(|n_tᵀq_t|, e^{-m_t})
+  with exponential gating stabilized by the running max m_t.
+* **sLSTM** — scalar-memory LSTM with per-head block-diagonal recurrence,
+  exponential input/forget gating with the same stabilizer trick; inherently
+  sequential, expressed as one ``lax.scan`` over time.
+
+Simplifications vs the reference implementation (noted per DESIGN.md): the
+short causal conv in front of mLSTM q/k and the learnable skip scales are
+omitted; group-norm is RMS per head.  These do not change the recurrence
+structure, state shapes, or FLOP profile class.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cdt, fanin_init, pdt, rms_norm
+
+
+def xlstm_dims(cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = int(cfg.xlstm_proj_factor * d)
+    H = cfg.n_heads
+    return d, d_in, H, d_in // H, d // H  # (d, d_in, H, P_m, P_s)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, n_stack: Optional[int] = None):
+    d, d_in, H, P, _ = xlstm_dims(cfg)
+    stack = (n_stack,) if n_stack else ()
+    ks = jax.random.split(key, 8)
+    dt = pdt(cfg)
+    return {
+        "ln": jnp.ones((*stack, d), dt),
+        "w_up": fanin_init(ks[0], (*stack, d, d_in), dt),
+        "w_z": fanin_init(ks[1], (*stack, d, d_in), dt),
+        "wq": fanin_init(ks[2], (*stack, d_in, d_in), dt),
+        "wk": fanin_init(ks[3], (*stack, d_in, d_in), dt),
+        "wv": fanin_init(ks[4], (*stack, d_in, d_in), dt),
+        "wi": fanin_init(ks[5], (*stack, d_in, H), jnp.float32),
+        "bi": jnp.zeros((*stack, H), jnp.float32),
+        "wf": fanin_init(ks[6], (*stack, d_in, H), jnp.float32),
+        "bf": jnp.full((*stack, H), 3.0, jnp.float32),  # open forget gates at init
+        "gnorm": jnp.ones((*stack, d_in), dt),
+        "w_down": fanin_init(ks[7], (*stack, d_in, d), dt),
+    }
+
+
+def _mlstm_qkvif(p, cfg, h):
+    """h: (B, T, d) -> q,k,v (B,T,H,P), i,f (B,T,H), z (B,T,d_in)."""
+    B, T, _ = h.shape
+    _, d_in, H, P, _ = xlstm_dims(cfg)
+    dt = cdt(cfg)
+    u = h @ p["w_up"].astype(dt)
+    z = h @ p["w_z"].astype(dt)
+    q = (u @ p["wq"].astype(dt)).reshape(B, T, H, P)
+    k = (u @ p["wk"].astype(dt)).reshape(B, T, H, P)
+    v = (u @ p["wv"].astype(dt)).reshape(B, T, H, P)
+    uf = u.astype(jnp.float32)
+    ig = uf @ p["wi"] + p["bi"]
+    fg = uf @ p["wf"] + p["bf"]
+    return q, k, v, ig, fg, z
+
+
+def mlstm_forward(p, cfg: ModelConfig, x):
+    """Parallel stabilized mLSTM. x: (B, T, d) -> (B, T, d) with residual."""
+    B, T, d = x.shape
+    _, d_in, H, P, _ = xlstm_dims(cfg)
+    dt = cdt(cfg)
+    h = rms_norm(x, p["ln"])
+    q, k, v, ig, fg, z = _mlstm_qkvif(p, cfg, h)
+
+    from repro.distributed.context import constrain_either
+
+    logf = jax.nn.log_sigmoid(fg)  # (B, T, H)
+    F = jnp.cumsum(logf, axis=1)
+    # D̃[t, s] = F_t - F_s + i_s  for s <= t
+    Dt = F[:, :, None, :] - F[:, None, :, :] + ig[:, None, :, :]  # (B, T, S, H)
+    Dt = constrain_either(Dt, 3, 1)  # heads rarely divide -> shard T blocks
+    tri = jnp.tril(jnp.ones((T, T), bool))
+    Dt = jnp.where(tri[None, :, :, None], Dt, -jnp.inf)
+    m = jnp.max(Dt, axis=2)  # (B, T, H)
+    Dm = jnp.exp(Dt - m[:, :, None, :])  # (B, T, S, H)
+
+    qk = jnp.einsum("bthp,bshp->bths", q.astype(jnp.float32), k.astype(jnp.float32)) * P**-0.5
+    S = qk * jnp.moveaxis(Dm, -1, 2)  # (B, T, H, S)
+    S = constrain_either(S, 2, 1)
+    denom = jnp.maximum(jnp.abs(jnp.sum(S, axis=-1)), jnp.exp(-m))  # (B, T, H)
+    hh = jnp.einsum("bths,bshp->bthp", S, v.astype(jnp.float32)) / denom[..., None]
+    hh = hh.reshape(B, T, d_in).astype(dt)
+    out = rms_norm(hh, p["gnorm"]) * jax.nn.silu(z)
+    return x + out @ p["w_down"].astype(dt)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, n_stack: Optional[int] = None):
+    _, d_in, H, P, _ = xlstm_dims(cfg)
+    stack = (n_stack,) if n_stack else ()
+    return {
+        "C": jnp.zeros((*stack, batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((*stack, batch, H, P), jnp.float32),
+        "m": jnp.full((*stack, batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p, cfg: ModelConfig, x, state):
+    """One-token recurrent mLSTM step. x: (B, 1, d)."""
+    B = x.shape[0]
+    _, d_in, H, P, _ = xlstm_dims(cfg)
+    dt = cdt(cfg)
+    h = rms_norm(x, p["ln"])
+    q, k, v, ig, fg, z = _mlstm_qkvif(p, cfg, h)
+    q, k, v = q[:, 0], k[:, 0] * P**-0.5, v[:, 0]  # (B, H, P)
+    ig, fg, z = ig[:, 0], fg[:, 0], z[:, 0]
+
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state["m"], ig)  # (B, H)
+    fprime = jnp.exp(logf + state["m"] - m_new)
+    iprime = jnp.exp(ig - m_new)
+    kf, vf, qf = k.astype(jnp.float32), v.astype(jnp.float32), q.astype(jnp.float32)
+    C = fprime[..., None, None] * state["C"] + iprime[..., None, None] * vf[..., :, None] * kf[..., None, :]
+    n = fprime[..., None] * state["n"] + iprime[..., None] * kf
+    num = jnp.einsum("bhpq,bhq->bhp", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, qf)), jnp.exp(-m_new))
+    hh = (num / den[..., None]).reshape(B, d_in).astype(dt)
+    out = rms_norm(hh, p["gnorm"]) * jax.nn.silu(z)
+    y = x[:, 0] + out @ p["w_down"].astype(dt)
+    return y[:, None], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig, n_stack: Optional[int] = None):
+    d, _, H, _, P = xlstm_dims(cfg)
+    stack = (n_stack,) if n_stack else ()
+    ks = jax.random.split(key, 8)
+    p = {"ln": jnp.ones((*stack, d), pdt(cfg)), "gnorm": jnp.ones((*stack, d), pdt(cfg))}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w{g}"] = fanin_init(ks[i], (*stack, d, d), jnp.float32)
+        p[f"r{g}"] = fanin_init(ks[4 + i], (*stack, H, P, P), jnp.float32, scale=0.5)
+        p[f"b{g}"] = (
+            jnp.full((*stack, d), 3.0, jnp.float32) if g == "f" else jnp.zeros((*stack, d), jnp.float32)
+        )
+    return p
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, n_stack: Optional[int] = None):
+    d = cfg.d_model
+    stack = (n_stack,) if n_stack else ()
+    z = jnp.zeros((*stack, batch, d), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((*stack, batch, d), -1e30, jnp.float32)}
+
+
+def _slstm_step(p, cfg: ModelConfig, state, wx):
+    """One sLSTM step. wx: dict of precomputed W·x_t (B, d) per gate."""
+    d, _, H, _, P = xlstm_dims(cfg)
+    B = state["h"].shape[0]
+    hprev = state["h"].reshape(B, H, P)
+
+    def rec(name):
+        return jnp.einsum("bhp,hpq->bhq", hprev, p[f"r{name}"]).reshape(B, d)
+
+    it = wx["i"] + rec("i") + p["bi"]
+    ft = wx["f"] + rec("f") + p["bf"]
+    zt = jnp.tanh(wx["z"] + rec("z") + p["bz"])
+    ot = jax.nn.sigmoid(wx["o"] + rec("o") + p["bo"])
+
+    m_new = jnp.maximum(ft + state["m"], it)  # exp forget gate: log f = ft
+    fprime = jnp.exp(ft + state["m"] - m_new)
+    iprime = jnp.exp(it - m_new)
+    c = fprime * state["c"] + iprime * zt
+    n = fprime * state["n"] + iprime
+    h = ot * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_forward(p, cfg: ModelConfig, x):
+    """Sequential sLSTM over T via lax.scan. x: (B, T, d), residual inside."""
+    B, T, d = x.shape
+    dt = cdt(cfg)
+    hin = rms_norm(x, p["ln"]).astype(jnp.float32)
+    wx = {g: hin @ p[f"w{g}"] for g in ("i", "f", "z", "o")}  # (B, T, d) each
+
+    def step(state, xs):
+        new = _slstm_step(p, cfg, state, xs)
+        return new, new["h"]
+
+    init = init_slstm_state(cfg, B)
+    _, hs = jax.lax.scan(step, init, {g: jnp.moveaxis(wx[g], 1, 0) for g in wx})
+    hs = jnp.moveaxis(hs, 0, 1).astype(dt)  # (B, T, d)
+    return x + rms_norm(hs, p["gnorm"])
+
+
+def slstm_decode(p, cfg: ModelConfig, x, state):
+    """x: (B, 1, d)."""
+    hin = rms_norm(x[:, 0], p["ln"]).astype(jnp.float32)
+    wx = {g: hin @ p[f"w{g}"] for g in ("i", "f", "z", "o")}
+    new = _slstm_step(p, cfg, state, wx)
+    y = x[:, 0] + rms_norm(new["h"].astype(cdt(cfg)), p["gnorm"])
+    return y[:, None], new

@@ -1,0 +1,246 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+Each optimizer is an ``Optimizer`` of pure functions:
+
+    state  = opt.init(params)
+    params, state = opt.update(params, grads, state)
+
+State is a NamedTuple-of-pytrees so it shards/jits cleanly.  These serve
+double duty in the framework:
+
+* **client optimizers** — local SGD/momentum inside each federated client's
+  epochs (MetaFed paper: plain SGD with momentum for local steps);
+* **server optimizers** — FedAvg (SGD on the pseudo-gradient), FedAdam /
+  FedYogi (Reddi et al., adaptive server updates), used by
+  ``repro.fl.server``.
+
+``adafactor`` (factored second moment, no first moment) exists so the
+314B-parameter dry-run configurations keep optimizer state sub-linear in the
+naive 2x-Adam footprint.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import PyTree, clip_by_global_norm, tree_zeros_like
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], Any]
+    update: Callable[..., tuple[PyTree, Any]]
+    name: str = "optimizer"
+
+
+class ScaleState(NamedTuple):
+    count: jax.Array
+
+
+class MomentumState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+class AdafactorState(NamedTuple):
+    count: jax.Array
+    # per-leaf: either (row, col) factored stats for >=2-D leaves or full nu.
+    vr: PyTree
+    vc: PyTree
+    v: PyTree
+
+
+def _lr_at(lr, count):
+    return lr(count) if callable(lr) else lr
+
+
+def sgd(lr, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return ScaleState(jnp.zeros((), jnp.int32))
+
+    def update(params, grads, state, **_):
+        step_lr = _lr_at(lr, state.count)
+        new = jax.tree.map(
+            lambda p, g: (p - step_lr * (g + weight_decay * p)).astype(p.dtype), params, grads
+        )
+        return new, ScaleState(state.count + 1)
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return MomentumState(jnp.zeros((), jnp.int32), tree_zeros_like(params, jnp.float32))
+
+    def update(params, grads, state, **_):
+        step_lr = _lr_at(lr, state.count)
+        g = jax.tree.map(lambda gi, p: gi + weight_decay * p, grads, params)
+        mu = jax.tree.map(lambda m, gi: beta * m + gi.astype(jnp.float32), state.mu, g)
+        if nesterov:
+            upd = jax.tree.map(lambda m, gi: gi + beta * m, g, mu)
+        else:
+            upd = mu
+        new = jax.tree.map(lambda p, u: (p - step_lr * u).astype(p.dtype), params, upd)
+        return new, MomentumState(state.count + 1, mu)
+
+    return Optimizer(init, update, "momentum")
+
+
+def adam(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adam / AdamW (decoupled decay when ``weight_decay`` > 0)."""
+
+    def init(params):
+        z = tree_zeros_like(params, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32), z, jax.tree.map(jnp.copy, z))
+
+    def update(params, grads, state, **_):
+        count = state.count + 1
+        step_lr = _lr_at(lr, state.count)
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+
+        def step(p, m, v):
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_lr * upd).astype(p.dtype)
+
+        return jax.tree.map(step, params, mu, nu), AdamState(count, mu, nu)
+
+    return Optimizer(init, update, "adam")
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    opt = adam(lr, b1, b2, eps, weight_decay)
+    return Optimizer(opt.init, opt.update, "adamw")
+
+
+def yogi(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-3) -> Optimizer:
+    """Yogi (Zaheer et al.) — the server optimizer behind FedYogi."""
+
+    def init(params):
+        z = tree_zeros_like(params, jnp.float32)
+        return AdamState(jnp.zeros((), jnp.int32), z, jax.tree.map(jnp.copy, z))
+
+    def update(params, grads, state, **_):
+        count = state.count + 1
+        step_lr = _lr_at(lr, state.count)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+
+        def nu_step(v, g):
+            g2 = jnp.square(g.astype(jnp.float32))
+            return v - (1 - b2) * jnp.sign(v - g2) * g2
+
+        nu = jax.tree.map(nu_step, state.nu, grads)
+        new = jax.tree.map(
+            lambda p, m, v: (p.astype(jnp.float32) - step_lr * m / (jnp.sqrt(v) + eps)).astype(p.dtype),
+            params,
+            mu,
+            nu,
+        )
+        return new, AdamState(count, mu, nu)
+
+    return Optimizer(init, update, "yogi")
+
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30, clip_threshold: float = 1.0) -> Optimizer:
+    """Adafactor-lite: factored second moment, no first moment.
+
+    Keeps optimizer state ~O(rows+cols) per matrix leaf — this is what makes
+    the grok-1-314b / mixtral-8x22b dry-run configurations fit HBM.
+    """
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def vr_init(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p.shape) else jnp.zeros((), jnp.float32)
+
+        def vc_init(p):
+            return (
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p.shape)
+                else jnp.zeros((), jnp.float32)
+            )
+
+        def v_init(p):
+            return jnp.zeros((), jnp.float32) if _factored(p.shape) else jnp.zeros(p.shape, jnp.float32)
+
+        return AdafactorState(
+            jnp.zeros((), jnp.int32),
+            jax.tree.map(vr_init, params),
+            jax.tree.map(vc_init, params),
+            jax.tree.map(v_init, params),
+        )
+
+    def update(params, grads, state, **_):
+        count = state.count + 1
+        step_lr = _lr_at(lr, state.count)
+        beta2 = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def step(p, g, vr, vc, v):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p.shape):
+                new_vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                new_vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r = new_vr / jnp.maximum(jnp.mean(new_vr, axis=-1, keepdims=True), eps)
+                upd = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(new_vc)[..., None, :] + 1e-12)
+                new_v = v
+            else:
+                new_v = beta2 * v + (1 - beta2) * g2
+                upd = g / jnp.sqrt(new_v + 1e-12)
+                new_vr, new_vc = vr, vc
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - step_lr * upd).astype(p.dtype), new_vr, new_vc, new_v
+
+        out = jax.tree.map(step, params, grads, state.vr, state.vc, state.v)
+        # unzip the 4-tuples
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        vr = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        vc = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[3], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdafactorState(count, vr, vc, v)
+
+    return Optimizer(init, update, "adafactor")
+
+
+def with_grad_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+
+    def update(params, grads, state, **kw):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return opt.update(params, grads, state, **kw)
+
+    return Optimizer(opt.init, update, f"{opt.name}+clip{max_norm:g}")
+
+
+REGISTRY: dict[str, Callable[..., Optimizer]] = {
+    "sgd": sgd,
+    "momentum": momentum,
+    "adam": adam,
+    "adamw": adamw,
+    "yogi": yogi,
+    "adafactor": adafactor,
+}
+
+
+def make(name: str, lr, **kw) -> Optimizer:
+    if name not in REGISTRY:
+        raise ValueError(f"unknown optimizer {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name](lr, **kw)

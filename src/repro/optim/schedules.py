@@ -1,0 +1,30 @@
+"""Learning-rate schedules as plain callables ``step -> lr``."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def f(step):
+        return jnp.float32(lr)
+
+    return f
+
+
+def cosine(peak: float, total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(1.0, warmup)
+        t = jnp.clip((step - warmup) / jnp.maximum(1.0, total_steps - warmup), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def exponential_decay(init: float, rate: float, every: int, floor: float = 0.0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        return jnp.maximum(jnp.float32(floor), init * rate ** (step / every))
+
+    return f

@@ -1,0 +1,56 @@
+"""Fixed-point codec shared by both homomorphic-aggregation paths.
+
+Maps clipped float updates to signed ``bits``-bit integers living in the
+uint32 ring where masked aggregation is exact:
+
+    q(x) = round( clip(x, ±c) / c * (2^(bits-1) - 1) )
+
+Aggregating n clients needs ``bits + ceil(log2(n)) <= 32`` so the true sum
+never wraps; :func:`check_headroom` enforces it.  Stochastic rounding keeps
+the quantizer unbiased (E[q] = x·scale), which matters for FedAvg's
+convergence and is what we property-test.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+RING_BITS = 32
+RING = 1 << RING_BITS
+
+
+def check_headroom(bits: int, n_clients: int) -> None:
+    need = bits + math.ceil(math.log2(max(2, n_clients)))
+    if need > RING_BITS:
+        raise ValueError(
+            f"{bits}-bit quantization x {n_clients} clients needs {need} bits > {RING_BITS}-bit ring"
+        )
+
+
+def encode(x, clip: float, bits: int, key=None):
+    """float (any shape) -> uint32 ring elements (two's complement)."""
+    scale = ((1 << (bits - 1)) - 1) / clip
+    v = jnp.clip(x.astype(jnp.float32), -clip, clip) * scale
+    if key is not None:  # stochastic rounding
+        v = jnp.floor(v + jax.random.uniform(key, v.shape))
+    else:
+        v = jnp.round(v)
+    return v.astype(jnp.int32).astype(jnp.uint32)
+
+
+def decode_sum(q_sum, clip: float, bits: int, n_clients: int):
+    """uint32 ring sum of n encoded vectors -> float sum.
+
+    Interprets the ring element as a signed value in
+    [-2^31, 2^31): valid whenever headroom holds.
+    """
+    scale = ((1 << (bits - 1)) - 1) / clip
+    signed = q_sum.astype(jnp.int32)  # two's complement reinterpretation
+    return signed.astype(jnp.float32) / scale
+
+
+def quant_error_bound(clip: float, bits: int) -> float:
+    """Worst-case per-element rounding error after decode."""
+    return clip / ((1 << (bits - 1)) - 1)

@@ -1,0 +1,118 @@
+"""Additively-homomorphic masked aggregation (paper §III-C "homomorphic encryption").
+
+Two implementations of the same ring-additive contract:
+
+1. **Dealer-masked, in-graph (scale path)** — each cohort adds a one-time pad
+   drawn from its own PRNG key to its quantized update; the TPU integer
+   all-reduce then sums *ciphertexts*.  Unmasking subtracts the all-reduced
+   mask sum.  The aggregation consumer only ever sees Σ(update); individual
+   updates are protected by the pad (information-theoretic in the uint32
+   ring).  Threat model: honest-but-curious aggregator with a trusted dealer
+   distributing mask seeds — the standard relaxation when the transport (ICI)
+   is trusted but the aggregation point is not.  Costs one extra integer
+   all-reduce, which is exactly what shows up in the §Roofline collective
+   term.
+
+2. **Bonawitz pairwise masking (cross-device path, host-side)** — pairwise
+   PRG masks s_ij with antisymmetric signs; the masks cancel in the sum with
+   *no* auxiliary communication.  This is the protocol a real MetaFed edge
+   deployment would run; implemented over numpy for the FL simulation and
+   property-tested for exact cancellation and dropout recovery.
+
+Both paths commute with the fixed-point codec in ``quantize.py`` — that is
+the additive homomorphism the paper invokes: E(a) ⊕ E(b) = E(a + b).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.privacy import quantize
+
+
+# ---------------------------------------------------------------------------
+# Path 1: dealer-masked aggregation (JAX-native, used inside fl_train_step)
+# ---------------------------------------------------------------------------
+
+
+def mask_stream(key, n: int) -> jax.Array:
+    """Deterministic uint32 one-time pad of length n from a PRNG key."""
+    return jax.random.bits(key, (n,), jnp.uint32)
+
+
+def mask_update(q_update: jax.Array, key) -> jax.Array:
+    """Client side: ciphertext = (q + pad) mod 2^32."""
+    return q_update + mask_stream(key, q_update.shape[0])  # uint32 wraps = mod 2^32
+
+
+def unmask_sum(masked_sum: jax.Array, mask_sum: jax.Array) -> jax.Array:
+    """Server side: Σq = Σ(q+pad) - Σpad  (mod 2^32)."""
+    return masked_sum - mask_sum
+
+
+def dealer_aggregate(q_updates: jax.Array, keys) -> jax.Array:
+    """Reference semantics for tests: q_updates (n_clients, P) uint32."""
+    masked = jnp.stack([mask_update(q, k) for q, k in zip(q_updates, keys)])
+    masks = jnp.stack([mask_stream(k, q_updates.shape[1]) for k in keys])
+    return unmask_sum(jnp.sum(masked, 0, dtype=jnp.uint32), jnp.sum(masks, 0, dtype=jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Path 2: Bonawitz-style pairwise masking (host-side / cross-device)
+# ---------------------------------------------------------------------------
+
+
+def _prg(seed: int, n: int) -> np.ndarray:
+    return np.random.default_rng(seed & 0xFFFFFFFFFFFF).integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+
+
+def pairwise_seed(i: int, j: int, session: int = 0) -> int:
+    """Symmetric seed for the (i, j) pair (stands in for the DH key agreement)."""
+    a, b = (i, j) if i < j else (j, i)
+    return hash((a, b, session)) & 0x7FFFFFFFFFFF
+
+
+def pairwise_mask(i: int, clients: list[int], n: int, session: int = 0) -> np.ndarray:
+    """mask_i = Σ_{j>i} PRG(s_ij) − Σ_{j<i} PRG(s_ij)  (mod 2^32)."""
+    m = np.zeros(n, np.uint32)
+    for j in clients:
+        if j == i:
+            continue
+        s = _prg(pairwise_seed(i, j, session), n)
+        m = m + s if j > i else m - s
+    return m
+
+
+def bonawitz_aggregate(q_updates: dict[int, np.ndarray], session: int = 0,
+                       planned: list[int] | None = None) -> np.ndarray:
+    """Sum quantized updates under pairwise masks; masks cancel exactly.
+
+    ``planned``: the client set the masks were generated against.  If a
+    planned client drops out after masking (its update is missing from
+    ``q_updates``), the survivors re-reveal their pairwise seeds with it
+    (the protocol's unmasking round) — simulated here by subtracting the
+    dropped client's net mask.
+    """
+    clients = sorted(q_updates)
+    planned = sorted(planned) if planned is not None else clients
+    n = len(next(iter(q_updates.values())))
+    total = np.zeros(n, np.uint32)
+    for i in clients:
+        total = total + q_updates[i] + pairwise_mask(i, planned, n, session)
+    for i in set(planned) - set(clients):  # dropout unmasking round
+        total = total + pairwise_mask(i, planned, n, session)
+    return total
+
+
+def aggregate_floats_bonawitz(updates: dict[int, np.ndarray], clip: float, bits: int,
+                              session: int = 0) -> np.ndarray:
+    """Convenience: encode -> pairwise-mask -> sum -> decode (float sum)."""
+    quantize.check_headroom(bits, len(updates))
+    q = {
+        i: np.asarray(quantize.encode(jnp.asarray(u), clip, bits))
+        for i, u in updates.items()
+    }
+    total = bonawitz_aggregate(q, session)
+    return np.asarray(quantize.decode_sum(jnp.asarray(total), clip, bits, len(updates)))

@@ -1,0 +1,6 @@
+"""Hardware constants for the roofline model (assignment-specified TPU v5e)."""
+
+PEAK_FLOPS_BF16 = 197e12   # per chip, bf16
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (assignment: ~50 GB/s/link)
+HBM_BYTES = 16 * 1024**3   # v5e: 16 GiB per chip

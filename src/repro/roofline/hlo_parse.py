@@ -1,0 +1,99 @@
+"""Parse collective traffic out of SPMD-partitioned HLO text.
+
+``compiled.as_text()`` is the *per-device* module after SPMD partitioning, so
+every shape below is a per-device shape.  For each collective op we estimate
+the bytes a chip moves over ICI:
+
+    all-reduce         2 * size      (ring: reduce-scatter + all-gather)
+    all-gather         size          (receives ~(N-1)/N of the output)
+    reduce-scatter     N * out size  (sends ~(N-1)/N of its input ~= N*out)
+    all-to-all         size          (sends/receives (N-1)/N of the block)
+    collective-permute size
+
+Approximations are ring-algorithm asymptotics; good to ~(N-1)/N.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?(?:\.\d+)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+# iota form: replica_groups=[num_groups,group_size]<=[total] (possibly with T(...))
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string like 'bf16[16,4096,384]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    out_bytes: int
+    group_size: int
+    traffic_bytes: int  # per-chip ICI bytes estimate
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    out: list[Collective] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line:  # async pair: count only the -start
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = shape_bytes(shape_str)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            group = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            group = int(gi.group(2)) if gi else 1
+        frac = (group - 1) / group if group > 1 else 0.0
+        if kind == "all-reduce":
+            traffic = int(2 * size * frac)
+        elif kind == "reduce-scatter":
+            traffic = int(size * (group - 1))
+        else:  # all-gather, all-to-all, collective-permute
+            traffic = int(size * frac) if kind != "collective-permute" else size
+        out.append(Collective(kind, size, group, traffic))
+    return out
+
+
+def collective_summary(hlo_text: str) -> dict:
+    colls = parse_collectives(hlo_text)
+    by_kind: dict[str, dict] = {}
+    for c in colls:
+        d = by_kind.setdefault(c.kind, {"count": 0, "bytes": 0, "traffic": 0})
+        d["count"] += 1
+        d["bytes"] += c.out_bytes
+        d["traffic"] += c.traffic_bytes
+    return {
+        "total_traffic_bytes": sum(c.traffic_bytes for c in colls),
+        "total_count": len(colls),
+        "by_kind": by_kind,
+    }

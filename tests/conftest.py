@@ -1,0 +1,10 @@
+import os
+import sys
+
+# NOTE (per brief): do NOT set xla_force_host_platform_device_count here —
+# smoke tests and benches must see 1 device; only launch/dryrun.py forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

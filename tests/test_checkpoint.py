@@ -1,0 +1,29 @@
+"""Checkpoint save/restore roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import base as cfg_base
+from repro.models import transformer as tf
+
+
+def test_roundtrip_params(tmp_path):
+    cfg = cfg_base.get("qwen3-0.6b").reduced()
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    ckpt.save(str(tmp_path / "c1"), params, metadata={"arch": cfg.name, "round": 7})
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+    back = ckpt.restore(str(tmp_path / "c1"), like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ckpt.metadata(str(tmp_path / "c1"))["round"] == 7
+
+
+def test_restore_rejects_mismatch(tmp_path):
+    tree = {"a": jnp.ones(3)}
+    ckpt.save(str(tmp_path / "c2"), tree)
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path / "c2"), {"b": jnp.ones(3)})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path / "c2"), {"a": jnp.ones(4)})

@@ -1,0 +1,108 @@
+"""MetaFed core: carbon model (Eq. 8), MARL orchestrator (Eq. 3-5), scheduler (Eq. 9)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import carbon, orchestrator as orch, scheduler
+from repro.core.selection import POLICIES
+
+
+def _fleet(n=20, seed=0):
+    return carbon.make_fleet(jax.random.PRNGKey(seed), n)
+
+
+def test_intensity_sinusoid_and_bounds():
+    fleet = _fleet()
+    vals = []
+    for t in np.linspace(0, 48, 97):
+        i = carbon.intensity(fleet, t)
+        vals.append(np.asarray(i))
+        assert np.all(np.asarray(i) >= 20.0)
+    vals = np.stack(vals)
+    # period-24 sinusoid: t and t+24 agree, t and t+12 anti-correlate
+    np.testing.assert_allclose(vals[0], vals[48], rtol=1e-5)
+    assert np.mean(np.abs(vals[0] - vals[24])) > 10.0
+    spread = vals.max(0) - vals.min(0)
+    assert np.all(spread > 100.0)  # amplitude 2*A = 140
+
+
+def test_carbon_class_tertiles():
+    assert int(carbon.carbon_class(100.0)) == 0
+    assert int(carbon.carbon_class(150.0)) == 1
+    assert int(carbon.carbon_class(250.0)) == 2
+
+
+def test_epsilon_decay_floor():
+    st = orch.init_state(10, eps0=0.3)
+    fleet = _fleet(10)
+    inten = carbon.intensity(fleet, 0.0)
+    key = jax.random.PRNGKey(0)
+    for i in range(400):
+        _, st = orch.select(jax.random.fold_in(key, i), st, fleet, inten, 3)
+    assert abs(float(st.eps) - orch.EPS_MIN) < 1e-6  # eps -> 0.01 floor
+
+
+def test_green_correction_sign():
+    """Eq. 5: on a dirty grid, high-capability providers get demoted."""
+    fleet = _fleet(10)
+    q = jnp.zeros(10)
+    dirty = jnp.full((10,), 300.0)
+    corrected = orch.green_corrected_q(q, fleet, dirty)
+    hi = np.argmax(np.asarray(fleet.capability))
+    lo = np.argmin(np.asarray(fleet.capability))
+    assert corrected[hi] < corrected[lo]
+
+
+def test_priority_monotone_in_intensity():
+    q = jnp.ones(5)
+    pr = scheduler.priority(q, jnp.array([50.0, 100.0, 150.0, 200.0, 400.0]))
+    assert np.all(np.diff(np.asarray(pr)) <= 0)
+    # below threshold: no penalty
+    np.testing.assert_allclose(np.asarray(pr[:2]), 1.0)
+
+
+def test_selection_policies_select_exactly_k():
+    fleet = _fleet(30)
+    st = orch.init_state(30)
+    inten = carbon.intensity(fleet, 5.0, jax.random.PRNGKey(1))
+    for name, pol in POLICIES.items():
+        mask, _ = pol(jax.random.PRNGKey(2), st, fleet, inten, 7)
+        assert int(jnp.sum(mask)) >= 7, name
+
+
+def test_green_policy_prefers_clean_grid():
+    fleet = _fleet(40)
+    st = orch.init_state(40)
+    inten = carbon.intensity(fleet, 3.0, jax.random.PRNGKey(4))
+    sel_i, rnd_i = [], []
+    for s in range(30):
+        m, _ = POLICIES["green"](jax.random.PRNGKey(s), st, fleet, inten, 8)
+        sel_i.append(float(jnp.mean(inten[m])))
+        m2, _ = POLICIES["random"](jax.random.PRNGKey(100 + s), st, fleet, inten, 8)
+        rnd_i.append(float(jnp.mean(inten[m2])))
+    assert np.mean(sel_i) < np.mean(rnd_i) - 20.0
+
+
+def test_q_update_moves_toward_reward():
+    st = orch.init_state(6)
+    mask = jnp.array([True, True, False, False, False, False])
+    st2, r = orch.update(st, mask, acc=jnp.float32(80.0), eff=jnp.float32(0.0),
+                         co2_g=jnp.float32(100.0), mean_intensity=jnp.float32(150.0))
+    row = np.asarray(st2.q[st.state_idx])
+    assert row[0] > 0 and row[1] > 0 and row[2] == 0  # only selected columns move
+    assert float(r) > 0  # big accuracy jump dominates Eq. 4
+
+
+def test_reward_constants_match_paper():
+    # R = 15*dA + 5*dE - 1*CO2  (Eq. 4, CO2 normalized to kg)
+    r = orch.reward(jnp.float32(1.0), jnp.float32(1.0), jnp.float32(1000.0))
+    assert abs(float(r) - (15.0 + 5.0 - 1.0)) < 1e-6
+
+
+def test_round_emissions_scale_with_selection():
+    fleet = _fleet(10)
+    sel2 = jnp.zeros(10, bool).at[:2].set(True)
+    sel8 = jnp.zeros(10, bool).at[:8].set(True)
+    co2_2, _ = carbon.round_emissions_g(fleet, sel2, 0.0, 1e12)
+    co2_8, _ = carbon.round_emissions_g(fleet, sel8, 0.0, 1e12)
+    assert float(co2_8) > 2.5 * float(co2_2)

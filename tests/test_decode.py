@@ -1,0 +1,72 @@
+"""Decode-path correctness: token-by-token decode == full-sequence forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import base as cfg_base
+from repro.models import transformer as tf
+
+B, S = 2, 12
+
+DECODE_ARCHS = [a for a in cfg_base.ASSIGNED if cfg_base.get(a).supports_decode]
+
+
+def _no_drop(cfg):
+    if cfg.family == "moe":
+        return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", [a for a in DECODE_ARCHS if cfg_base.get(a).family != "vlm"])
+def test_decode_matches_forward(arch):
+    cfg = _no_drop(cfg_base.get(arch).reduced())
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full, _ = tf.forward(params, cfg, {"tokens": toks})
+
+    st = tf.init_decode_state(cfg, B, S)
+    step = jax.jit(lambda p, t, s: tf.decode_step(p, cfg, t, s))
+    outs = []
+    for t in range(S):
+        lg, st = step(params, toks[:, t : t + 1], st)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    err = float(jnp.max(jnp.abs(dec - full)))
+    scale = float(jnp.max(jnp.abs(full))) + 1e-9
+    assert err / scale < 5e-5, f"{arch}: decode/forward rel err {err/scale:.2e}"
+
+
+def test_encoder_only_has_no_decode():
+    cfg = cfg_base.get("hubert-xlarge").reduced()
+    with pytest.raises(ValueError):
+        tf.init_decode_state(cfg, B, S)
+
+
+def test_sliding_window_ring_buffer():
+    """SWA decode with a ring buffer == full forward with the same window."""
+    cfg = dataclasses.replace(cfg_base.get("qwen3-0.6b").reduced(), sliding_window=6)
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full, _ = tf.forward(params, cfg, {"tokens": toks})
+    st = tf.init_decode_state(cfg, B, S)  # ring buffer: only `window` slots
+    assert st["cache"]["k"].shape[-3] == 6
+    outs = []
+    step = jax.jit(lambda p, t, s: tf.decode_step(p, cfg, t, s))
+    for t in range(S):
+        lg, st = step(params, toks[:, t : t + 1], st)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    err = float(jnp.max(jnp.abs(dec - full)))
+    assert err / (float(jnp.max(jnp.abs(full))) + 1e-9) < 5e-5
+
+
+def test_vlm_decode_shapes():
+    cfg = cfg_base.get("internvl2-1b").reduced()
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    st = tf.init_decode_state(cfg, B, 64)
+    lg, st2 = tf.decode_step(params, cfg, jnp.ones((B, 1), jnp.int32), st)
+    assert lg.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.isfinite(lg).all())
+    assert int(st2["pos"]) == 1

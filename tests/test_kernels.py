@@ -1,0 +1,78 @@
+"""Pallas kernel validation (interpret mode) against the pure-jnp oracles.
+
+Per the brief: sweep shapes/dtypes and assert_allclose against ref.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.privacy import quantize, secure_agg
+
+
+def _qkv(key, B, T, S, H, K, hd, dtype):
+    ks = jax.random.split(key, 3)
+    return (
+        jax.random.normal(ks[0], (B, T, H, hd), dtype),
+        jax.random.normal(ks[1], (B, S, K, hd), dtype),
+        jax.random.normal(ks[2], (B, S, K, hd), dtype),
+    )
+
+
+CASES = [
+    # (B, T, S, H, K, hd, causal, window, cap)
+    (2, 128, 128, 4, 2, 64, True, None, 0.0),
+    (1, 100, 100, 4, 4, 32, True, None, 0.0),     # non-block-multiple T
+    (2, 256, 256, 4, 2, 64, True, 64, 0.0),       # sliding window
+    (2, 128, 128, 8, 2, 64, True, 256, 0.0),      # window > T
+    (1, 128, 128, 4, 1, 64, False, None, 0.0),    # bidirectional, MQA
+    (2, 128, 128, 4, 2, 64, True, None, 30.0),    # grok logit cap
+    (1, 64, 64, 2, 2, 80, True, None, 0.0),       # hd=80 (hubert) pads to 128
+    (1, 72, 72, 3, 1, 48, True, 17, 8.0),         # awkward everything
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_attention_fp32(case):
+    B, T, S, H, K, hd, causal, window, cap = case
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, T, S, H, K, hd, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, logit_cap=cap,
+                              block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window, logit_cap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.bfloat16, 3e-2), (jnp.float32, 3e-5)])
+def test_flash_attention_dtypes(dtype, tol):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 128, 128, 4, 2, 64, dtype)
+    out = ops.flash_attention(q, k, v, causal=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("blocks", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shapes(blocks):
+    bq, bk = blocks
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 160, 160, 4, 4, 64, jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    expect = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("n,P,bits", [(4, 1000, 16), (8, 5000, 20), (16, 2048, 16), (3, 7777, 24)])
+def test_masked_agg_kernel(n, P, bits):
+    rng = np.random.default_rng(n)
+    ups = rng.normal(0, 0.05, (n, P)).astype(np.float32)
+    qs = jnp.stack([quantize.encode(jnp.asarray(u), 1.0, bits) for u in ups])
+    keys = list(jax.random.split(jax.random.PRNGKey(7), n))
+    masked = jnp.stack([secure_agg.mask_update(q, k) for q, k in zip(qs, keys)])
+    masks = jnp.stack([secure_agg.mask_stream(k, P) for k in keys])
+    out = ops.masked_aggregate(masked, masks, 1.0, bits)
+    expect = ref.masked_aggregate_ref(masked, masks, 1.0, bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-6)
+    # and the decoded result matches the true float sum within quant error
+    bound = quantize.quant_error_bound(1.0, bits) * n + 1e-6
+    np.testing.assert_allclose(np.asarray(out), ups.sum(0), atol=bound)

@@ -1,0 +1,54 @@
+"""Optimizer library: each optimizer must descend a quadratic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import optimizers as opt_mod
+from repro.optim.schedules import cosine, constant, exponential_decay
+
+
+def _quad_loss(p):
+    return jnp.sum((p["w"] - 3.0) ** 2) + jnp.sum((p["b"] + 1.0) ** 2)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("sgd", {}), ("momentum", {}), ("adam", {}), ("adamw", {"weight_decay": 1e-4}),
+    ("yogi", {}), ("adafactor", {}),
+])
+def test_optimizer_descends(name, kw):
+    opt = opt_mod.make(name, 0.1, **kw)
+    params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros(4)}
+    state = opt.init(params)
+    l0 = float(_quad_loss(params))
+    for _ in range(60):
+        g = jax.grad(_quad_loss)(params)
+        params, state = opt.update(params, g, state)
+    l1 = float(_quad_loss(params))
+    assert l1 < 0.2 * l0, f"{name}: {l0} -> {l1}"
+
+
+def test_grad_clip_wrapper():
+    opt = opt_mod.with_grad_clip(opt_mod.sgd(1.0), 0.1)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    g = {"w": jnp.array([100.0, 0.0, 0.0])}
+    new, _ = opt.update(params, g, state)
+    assert float(jnp.linalg.norm(new["w"])) <= 0.100001
+
+
+def test_adafactor_state_is_factored():
+    opt = opt_mod.adafactor(0.01)
+    params = {"w": jnp.zeros((64, 32))}
+    st = opt.init(params)
+    assert st.vr["w"].shape == (64,) and st.vc["w"].shape == (32,)
+
+
+def test_schedules():
+    f = cosine(1.0, 100, warmup=10)
+    assert float(f(0)) == 0.0
+    assert float(f(10)) == pytest.approx(1.0)
+    assert float(f(100)) == pytest.approx(0.0, abs=1e-6)
+    assert float(constant(0.3)(5)) == pytest.approx(0.3)
+    g = exponential_decay(1.0, 0.5, 10)
+    assert float(g(10)) == pytest.approx(0.5)

@@ -1,0 +1,103 @@
+"""Privacy stack: quantizer, masked aggregation, Paillier, DP accountant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.privacy import accountant, dp, paillier, quantize, secure_agg
+from repro.utils import tree_ravel
+
+
+def test_quantize_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 0.3, 4096).astype(np.float32)
+    for bits in (12, 16, 20, 24):
+        q = quantize.encode(jnp.asarray(x), 1.0, bits)
+        back = np.asarray(quantize.decode_sum(q, 1.0, bits, 1))
+        assert np.max(np.abs(back - np.clip(x, -1, 1))) <= quantize.quant_error_bound(1.0, bits)
+
+
+def test_headroom_guard():
+    quantize.check_headroom(16, 65536)
+    with pytest.raises(ValueError):
+        quantize.check_headroom(20, 1 << 13)
+
+
+def test_dealer_masking_hides_and_sums():
+    rng = np.random.default_rng(1)
+    ups = rng.normal(0, 0.1, (8, 300)).astype(np.float32)
+    qs = jnp.stack([quantize.encode(jnp.asarray(u), 2.0, 18) for u in ups])
+    keys = list(jax.random.split(jax.random.PRNGKey(3), 8))
+    masked = [np.asarray(secure_agg.mask_update(q, k)) for q, k in zip(qs, keys)]
+    # ciphertexts look nothing like plaintexts (masked uniformly over the ring)
+    for m, q in zip(masked, np.asarray(qs)):
+        assert not np.array_equal(m, q)
+    total = secure_agg.dealer_aggregate(qs, keys)
+    dec = np.asarray(quantize.decode_sum(total, 2.0, 18, 8))
+    np.testing.assert_allclose(dec, ups.sum(0), atol=8 * quantize.quant_error_bound(2.0, 18))
+
+
+def test_bonawitz_pairwise_cancellation_and_dropout():
+    rng = np.random.default_rng(2)
+    qs = {i: rng.integers(0, 1 << 16, 200).astype(np.uint32) for i in range(6)}
+    total = secure_agg.bonawitz_aggregate(qs, session=9)
+    expect = np.zeros(200, np.uint32)
+    for v in qs.values():
+        expect = expect + v
+    assert np.array_equal(total, expect)
+    # client 5 drops after masks were set up against the full roster
+    qs_drop = {i: qs[i] for i in range(5)}
+    total_drop = secure_agg.bonawitz_aggregate(qs_drop, session=9, planned=list(range(6)))
+    expect_drop = np.zeros(200, np.uint32)
+    for i in range(5):
+        expect_drop = expect_drop + qs[i]
+    assert np.array_equal(total_drop, expect_drop)
+
+
+def test_paillier_homomorphism_on_update_vector():
+    pub, priv = paillier.keygen(256)
+    rng = np.random.default_rng(3)
+    a = rng.integers(-500, 500, 12)
+    b = rng.integers(-500, 500, 12)
+    ca = paillier.encrypt_vector(pub, a)
+    cb = paillier.encrypt_vector(pub, b)
+    csum = paillier.aggregate_ciphertexts(pub, [ca, cb])
+    got = paillier.decrypt_vector_signed(priv, csum)
+    assert got == list(a + b)
+
+
+def test_paillier_matches_ring_mask_path():
+    """Both HE paths must decode the same aggregate (the additive contract)."""
+    rng = np.random.default_rng(4)
+    ups = rng.normal(0, 0.1, (3, 40)).astype(np.float32)
+    ring = secure_agg.aggregate_floats_bonawitz({i: ups[i] for i in range(3)}, clip=1.0, bits=16)
+    pub, priv = paillier.keygen(256)
+    qs = [np.asarray(quantize.encode(jnp.asarray(u), 1.0, 16)).astype(np.int64) for u in ups]
+    signed = [np.where(q > 1 << 31, q - (1 << 32), q) for q in qs]
+    enc = [paillier.encrypt_vector(pub, s) for s in signed]
+    dec = np.array(paillier.decrypt_vector_signed(priv, paillier.aggregate_ciphertexts(pub, enc)))
+    scale = ((1 << 15) - 1) / 1.0
+    np.testing.assert_allclose(dec / scale, ring, atol=1e-6)
+
+
+def test_accountant_monotonic_and_paper_budget():
+    e1 = accountant.eps_from_rdp(0.2, 5.0, 100, 1e-5)
+    e2 = accountant.eps_from_rdp(0.2, 10.0, 100, 1e-5)
+    assert e2 < e1  # more noise, less epsilon
+    e3 = accountant.eps_from_rdp(0.2, 5.0, 50, 1e-5)
+    assert e3 < e1  # fewer rounds, less epsilon
+    sigma = accountant.calibrate_sigma(1.2, 0.2, 100, 1e-5)
+    assert accountant.eps_from_rdp(0.2, sigma, 100, 1e-5) <= 1.2 + 1e-6
+    assert accountant.eps_from_rdp(0.2, sigma * 0.98, 100, 1e-5) > 1.2 - 0.05
+
+
+def test_dp_clip_and_noise():
+    tree = {"a": jnp.ones((10,)) * 3.0, "b": jnp.ones((5,)) * -2.0}
+    clipped, norm = dp.clip_update(tree, 1.0)
+    flat, _ = tree_ravel(clipped)
+    assert float(jnp.linalg.norm(flat)) <= 1.0 + 1e-5
+    cfg = dp.DPConfig(clip=1.0, sigma=2.0)
+    noised = dp.add_noise(jax.random.PRNGKey(0), clipped, cfg)
+    f1, _ = tree_ravel(noised)
+    assert not np.allclose(np.asarray(f1), np.asarray(flat))
+    assert dp.spent_epsilon(dp.DPConfig(sigma=7.03), 100) < 1.25

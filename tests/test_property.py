@@ -1,0 +1,108 @@
+"""Hypothesis property tests on the system's invariants (brief deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.privacy import quantize, secure_agg
+from repro.utils import clip_by_global_norm, tree_ravel, tree_unravel
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(
+    st.integers(min_value=2, max_value=12).map(lambda b: 1 << b),  # vector size
+    st.integers(min_value=10, max_value=24),                        # bits
+    st.floats(min_value=0.1, max_value=16.0),                       # clip
+    st.integers(min_value=0, max_value=2**31 - 1),                  # seed
+)
+@settings(**SET)
+def test_quantize_roundtrip_always_within_bound(n, bits, clip, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, clip / 2, n).astype(np.float32)
+    q = quantize.encode(jnp.asarray(x), clip, bits)
+    back = np.asarray(quantize.decode_sum(q, clip, bits, 1))
+    assert np.max(np.abs(back - np.clip(x, -clip, clip))) <= quantize.quant_error_bound(clip, bits) * 1.01
+
+
+@given(
+    st.integers(min_value=2, max_value=12),    # n clients
+    st.integers(min_value=1, max_value=500),   # dim
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SET)
+def test_pairwise_masks_always_cancel(n, dim, seed):
+    """sum_i mask_i == 0 in the ring, for any roster and session."""
+    total = np.zeros(dim, np.uint32)
+    clients = list(range(n))
+    for i in clients:
+        total = total + secure_agg.pairwise_mask(i, clients, dim, session=seed)
+    assert np.array_equal(total, np.zeros(dim, np.uint32))
+
+
+@given(
+    st.integers(min_value=2, max_value=10),
+    st.integers(min_value=4, max_value=200),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SET)
+def test_masked_aggregation_linearity(n, dim, seed):
+    """decode(sum(encode(x_i))) ~= sum(x_i): the additive-HE contract."""
+    rng = np.random.default_rng(seed)
+    ups = rng.normal(0, 0.2, (n, dim)).astype(np.float32)
+    got = secure_agg.aggregate_floats_bonawitz(
+        {i: ups[i] for i in range(n)}, clip=4.0, bits=20, session=seed
+    )
+    bound = n * quantize.quant_error_bound(4.0, 20) + 1e-6
+    assert np.max(np.abs(got - ups.sum(0))) <= bound
+
+
+@given(
+    st.floats(min_value=0.01, max_value=100.0),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SET)
+def test_clip_never_exceeds_bound_and_preserves_direction(max_norm, seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(0, 5, 64).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(0, 5, (4, 4)).astype(np.float32))}
+    clipped, pre = clip_by_global_norm(tree, max_norm)
+    flat_c, _ = tree_ravel(clipped)
+    flat_o, _ = tree_ravel(tree)
+    post = float(jnp.linalg.norm(flat_c))
+    assert post <= max_norm * 1.001
+    if float(pre) > 0:
+        cos = float(jnp.dot(flat_c, flat_o) / (jnp.linalg.norm(flat_c) * jnp.linalg.norm(flat_o) + 1e-12))
+        assert cos > 0.9999  # clipping only rescales
+
+
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+@settings(**SET)
+def test_tree_ravel_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    tree = {
+        "w": jnp.asarray(rng.normal(size=(3, 5)).astype(np.float32)),
+        "nested": {"b": jnp.asarray(rng.normal(size=(7,)).astype(np.float32))},
+    }
+    flat, td = tree_ravel(tree)
+    back = tree_unravel(td, flat)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@given(
+    st.integers(min_value=1, max_value=6),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_stochastic_rounding_unbiased(k, seed):
+    """E[decode(encode_stochastic(x))] -> x (quantizer unbiasedness)."""
+    x = jnp.full((256,), 0.1234567 * k)
+    acc = np.zeros(256)
+    trials = 64
+    for i in range(trials):
+        q = quantize.encode(x, 1.0, 10, key=jax.random.fold_in(jax.random.PRNGKey(seed), i))
+        acc += np.asarray(quantize.decode_sum(q, 1.0, 10, 1))
+    mean = acc / trials
+    step = quantize.quant_error_bound(1.0, 10)
+    assert np.max(np.abs(mean - np.clip(0.1234567 * k, -1, 1))) < step

@@ -1,0 +1,86 @@
+"""Sharding rules + HLO parsing (no multi-device runtime needed: AbstractMesh)."""
+import jax
+import numpy as np
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import base as cfg_base
+from repro.distributed import specs as dspec
+from repro.roofline import hlo_parse
+
+
+def _mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _sds(shape):
+    return jax.ShapeDtypeStruct(shape, np.dtype("float32"))
+
+
+def test_attention_weights_shard_only_when_heads_divide():
+    mesh = _mesh()
+    # gemma: 16 heads % 16 == 0 -> sharded
+    g = cfg_base.get("gemma-7b")
+    spec = dspec.param_spec((jax.tree_util.DictKey("wq"),), _sds((28, 3072, 4096)), g, 16)
+    assert spec == P(None, None, "model")
+    # qwen2: 14 heads -> replicated (mid-head sharding forbidden)
+    q = cfg_base.get("qwen2-0.5b")
+    spec = dspec.param_spec((jax.tree_util.DictKey("wq"),), _sds((24, 896, 896)), q, 16)
+    assert spec == P()
+    # mixtral: q heads 48 shard, kv heads 8 replicate
+    m = cfg_base.get("mixtral-8x22b")
+    assert dspec.param_spec((jax.tree_util.DictKey("wq"),), _sds((56, 6144, 6144)), m, 16) == P(None, None, "model")
+    assert dspec.param_spec((jax.tree_util.DictKey("wk"),), _sds((56, 6144, 1024)), m, 16) == P()
+
+
+def test_ffn_and_embed_rules():
+    q = cfg_base.get("qwen2-0.5b")
+    assert dspec.param_spec((jax.tree_util.DictKey("w1"),), _sds((24, 896, 4864)), q, 16) == P(None, None, "model")
+    assert dspec.param_spec((jax.tree_util.DictKey("w2"),), _sds((24, 4864, 896)), q, 16) == P(None, "model", None)
+    assert dspec.param_spec((jax.tree_util.DictKey("embed"),), _sds((151936, 896)), q, 16) == P("model", None)
+    # norms replicate
+    assert dspec.param_spec((jax.tree_util.DictKey("ln1"),), _sds((24, 896)), q, 16) == P()
+
+
+def test_mlstm_projections_always_replicate():
+    x = cfg_base.get("xlstm-125m")
+    path = (jax.tree_util.DictKey("mlstm"), jax.tree_util.DictKey("wq"))
+    assert dspec.param_spec(path, _sds((6, 1536, 1536)), x, 16) == P()
+
+
+def test_batch_spec_divisibility():
+    mesh = _mesh()
+    assert dspec.batch_spec(mesh, 256, 1) == P(("data",), None)
+    assert dspec.batch_spec(mesh, 1, 1) == P(None, None)  # long_500k: replicate
+    multi = _mesh(multi=True)
+    assert dspec.batch_spec(multi, 256, 1) == P(("pod", "data"), None)
+
+
+def test_hlo_collective_parsing_iota_and_braces():
+    txt = """
+  %all-reduce.1 = f32[16,4096,896]{2,1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%add
+  %all-gather.2 = bf16[4,1024]{1,0} all-gather(%y), channel_id=2, replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = u32[128]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    colls = hlo_parse.parse_collectives(txt)
+    kinds = {c.kind: c for c in colls}
+    ar = kinds["all-reduce"]
+    assert ar.group_size == 16
+    assert ar.out_bytes == 16 * 4096 * 896 * 4
+    assert ar.traffic_bytes == int(2 * ar.out_bytes * 15 / 16)
+    ag = kinds["all-gather"]
+    assert ag.group_size == 4 and ag.out_bytes == 4 * 1024 * 2
+    assert kinds["collective-permute"].traffic_bytes == 128 * 4
+
+
+def test_shape_bytes_tuple():
+    assert hlo_parse.shape_bytes("(f32[2,3], bf16[4])") == 2 * 3 * 4 + 4 * 2
+
+
+def test_mesh_factory_shapes():
+    # only the geometry (can't instantiate 512 devices here — that is dryrun's job)
+    from repro.launch.mesh import data_axes
+    m = _mesh(multi=True)
+    assert tuple(m.shape[a] for a in ("pod", "data", "model")) == (2, 16, 16)
+    assert data_axes(m) == ("pod", "data")

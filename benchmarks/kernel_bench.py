@@ -65,12 +65,37 @@ def bench_masked_agg(n=16, P=262144, bits=16):
     ]
 
 
+def bench_staleness_agg(k=16, P=262144):
+    """Async-runtime hot path: Σ_i w_i·delta_i over the K-deep buffer."""
+    rng = np.random.default_rng(1)
+    deltas = jnp.asarray(rng.normal(0, 0.05, (k, P)).astype(np.float32))
+    taus = rng.integers(0, 8, k)
+    weights = jnp.asarray((1.0 / np.sqrt(1.0 + taus)).astype(np.float32))
+    out = ops.staleness_aggregate(deltas, weights)
+    expect = ref.staleness_aggregate_ref(deltas, weights)
+    err = float(np.max(np.abs(np.asarray(out) - np.asarray(expect))))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+    us_k = _time(lambda: ops.staleness_aggregate(deltas, weights))
+    us_r = _time(lambda: ref.staleness_aggregate_ref(deltas, weights))
+    bytes_moved = k * P * 4 + P * 4
+    return [
+        csv_line(
+            f"staleness_agg_pallas_k{k}_P{P}", us_k,
+            f"bytes={bytes_moved};parity_max_abs_err={err:.2e};"
+            f"ref_over_kernel_speedup={us_r / us_k:.2f}x",
+        ),
+        csv_line(f"staleness_agg_xla_ref_k{k}_P{P}", us_r, "einsum_reference=1"),
+    ]
+
+
 def main():
     rows = []
     rows += bench_flash(T=256)
     rows += bench_flash(T=512)
     rows += bench_masked_agg(n=8, P=65536)
     rows += bench_masked_agg(n=16, P=262144)
+    rows += bench_staleness_agg(k=8, P=65536)
+    rows += bench_staleness_agg(k=16, P=262144)
     for r in rows:
         print(r)
     return rows

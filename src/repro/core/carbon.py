@@ -102,12 +102,19 @@ def round_emissions_g(fleet: ProviderFleet, selected, t_hours, round_flops: floa
     return jnp.sum(per), per
 
 
-def round_duration_s(fleet: ProviderFleet, selected, round_flops: float, model_bytes: float):
-    """Synchronous-round wall time: slowest selected client (compute + 2x transfer).
+def client_durations_s(fleet: ProviderFleet, round_flops: float, model_bytes: float):
+    """Per-client local-round latency (compute + 2x transfer), shape (n,).
 
-    Bandwidth is normalized so N_i = 1.0 ~ 100 Mbps.
+    Bandwidth is normalized so N_i = 1.0 ~ 100 Mbps.  This is the latency
+    model the asynchronous runtime draws completion times from; the
+    synchronous round time below is its max over the cohort.
     """
     compute = round_flops / (fleet.capability * DEVICE_PEAK_FLOPS)
     transfer = 2.0 * model_bytes / (fleet.bandwidth * 100e6 / 8)
-    per = (compute + transfer) * selected.astype(jnp.float32)
+    return compute + transfer
+
+
+def round_duration_s(fleet: ProviderFleet, selected, round_flops: float, model_bytes: float):
+    """Synchronous-round wall time: slowest selected client (compute + 2x transfer)."""
+    per = client_durations_s(fleet, round_flops, model_bytes) * selected.astype(jnp.float32)
     return jnp.max(per) + ROUND_OVERHEAD_S

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import carbon as carbon_mod
+from repro.core import scheduler
 
 # --- paper constants -------------------------------------------------------
 ALPHA_ACC = 15.0
@@ -101,25 +102,20 @@ def select(
     q_row = st.q[st.state_idx]
     score = green_corrected_q(q_row, fleet, intensity) if use_green else q_row
     if use_priority:
-        from repro.core.scheduler import priority
-
         # Optimistic unit baseline: Eq. 9 with an untrained Q-table (Q = 0)
         # is degenerate (0 / anything = 0 — no carbon preference until the
         # Q-values separate).  Adding a +1 offset makes the cold-start policy
         # reduce exactly to the Green-only score and lets learned Q-values
         # bias it as training progresses.  Pure offset: ordering of Eq. 9 is
         # preserved once Q >> 1.
-        score = priority(1.0 + score, intensity)
+        score = scheduler.priority(1.0 + score, intensity)
     kx, kr, ke = jax.random.split(key, 3)
     # 0.15-scale jitter: rotates the greedy pick among near-tied providers
     # across rounds (strict argmax re-selects the same k clients forever,
     # starving data coverage under non-IID shards; cf. scheduler.green_scores)
     jitter = 0.15 * jax.random.uniform(kx, (n,))
-    kth = jnp.sort(score + jitter)[-k]
-    greedy = (score + jitter) >= kth
-    explore_scores = jax.random.uniform(kr, (n,))
-    kth_e = jnp.sort(explore_scores)[-k]
-    explore = explore_scores >= kth_e
+    greedy = scheduler.topk_mask(score + jitter, k)
+    explore = scheduler.topk_mask(jax.random.uniform(kr, (n,)), k)
     use_explore = jax.random.uniform(ke) < st.eps
     mask = jnp.where(use_explore, explore, greedy)
 

@@ -36,5 +36,10 @@ def green_scores(key, intensity) -> jax.Array:
 
 
 def topk_mask(scores, k: int) -> jax.Array:
-    kth = jnp.sort(scores)[-k]
-    return scores >= kth
+    """Boolean mask of the exactly-k highest scores.
+
+    ``lax.top_k`` breaks ties by index, so tied scores can never inflate the
+    cohort past k (the old ``scores >= kth`` form selected every tied entry).
+    """
+    _, idx = jax.lax.top_k(scores, k)
+    return jnp.zeros(scores.shape, bool).at[idx].set(True)

@@ -1,0 +1,120 @@
+"""Two-tier edge→global aggregation topology for the async runtime.
+
+The flat MetaFed protocol routes every client delta through one server —
+the survey literature's dominant scalability bottleneck for Metaverse FL
+(flat single-server aggregation + straggler latency).  Here clients are
+clustered into *regions* by grid-zone phase (their carbon traces are
+coherent within a region), each region runs its own edge aggregator with
+
+  * its own sub-fleet view of the provider registry (capability/bandwidth/
+    efficiency/phase slices),
+  * its own selection-policy instance from ``repro.core.selection.POLICIES``
+    with an independent MARL orchestrator state,
+  * its own staleness buffer and model version counter,
+
+and edge aggregators periodically push their accumulated delta to the
+global server (every ``edge_sync_every`` edge flushes), scaled by the
+region's client share.
+
+Degenerate case used as the correctness anchor: ``n_regions=1`` with
+``edge_sync_every=1`` collapses to the flat topology — the edge delta *is*
+the flush delta (tracked additively, never re-derived by subtraction, so
+the global update is bitwise the flat one).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import carbon as carbon_mod
+from repro.core import orchestrator as orch
+from repro.utils import PyTree
+
+
+def staleness_weight(tau, cap: int = 10):
+    """FedBuff-style down-weighting: s(τ) = 1/sqrt(1 + min(τ, cap)).
+
+    τ = (edge model version at flush) − (version the client trained on).
+    The cap bounds how far a very stale delta can be discounted so slow
+    regions keep contributing signal instead of vanishing.
+    """
+    tau_c = np.minimum(np.asarray(tau, np.float64), float(cap))
+    return 1.0 / np.sqrt(1.0 + tau_c)
+
+
+def assign_regions(fleet: carbon_mod.ProviderFleet, n_regions: int) -> list[np.ndarray]:
+    """Cluster client indices into phase-coherent regions (grid zones).
+
+    Clients are sorted by their region phase L_i and split into contiguous,
+    balanced groups, so each region sees a coherent carbon-intensity trace.
+    Every client lands in exactly one region; all regions are non-empty
+    (requires n_regions <= n clients).
+    """
+    n = fleet.n
+    if not 1 <= n_regions <= n:
+        raise ValueError(f"n_regions={n_regions} must be in [1, {n}]")
+    order = np.argsort(np.asarray(fleet.phase), kind="stable")
+    return [np.sort(chunk) for chunk in np.array_split(order, n_regions)]
+
+
+def subfleet(fleet: carbon_mod.ProviderFleet, ids: np.ndarray) -> carbon_mod.ProviderFleet:
+    """Region view of the provider registry (rows ``ids`` of every field)."""
+    ix = jnp.asarray(ids)
+    return carbon_mod.ProviderFleet(
+        capability=fleet.capability[ix],
+        bandwidth=fleet.bandwidth[ix],
+        efficiency=fleet.efficiency[ix],
+        phase=fleet.phase[ix],
+    )
+
+
+@dataclasses.dataclass
+class BufferEntry:
+    """One completed client delta waiting in an edge aggregator's buffer."""
+
+    client: int          # global client id
+    local: int           # region-local index (for the sub-fleet/policy mask)
+    version: int         # edge model version the client trained on
+    wave: int            # dispatch-wave index (key derivation per flush)
+    weight: float        # data-size weight n_i
+    delta: PyTree        # w_local - w_edge (trained against `version`)
+    loss: float
+    t_hours: float       # carbon-phase time of the dispatching wave
+    k_agg: jax.Array     # aggregation key of the dispatching wave
+    inten: jax.Array     # region intensity at dispatch (policy's view)
+
+
+@dataclasses.dataclass
+class Region:
+    """Edge aggregator state: one per region."""
+
+    idx: int
+    clients: np.ndarray                 # global client ids
+    fleet: carbon_mod.ProviderFleet     # sub-fleet view
+    policy: Callable                    # selection policy instance
+    orch_state: orch.OrchestratorState  # this region's MARL state
+    key: jax.Array                      # region PRNG stream
+    edge_params: PyTree                 # current edge model
+    edge_accum: PyTree                  # Σ flush deltas since last global sync
+    version: int = 0                    # bumped per buffer flush
+    waves: int = 0                      # dispatch waves issued
+    flushes: int = 0                    # buffer flushes applied
+    pending: int = 0                    # flushes not yet synced to global
+    inflight: int = 0                   # clients currently training
+    buffer: list = dataclasses.field(default_factory=list)
+    co2_g: float = 0.0                  # cumulative regional emissions
+    # flushes already triggered per wave: the first flush a wave triggers
+    # uses its k_agg verbatim (the sync-equivalence anchor), later ones fold
+    # the count in so mask/noise streams are never reused across flushes
+    wave_flushes: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return len(self.clients)
+
+    def global_ids(self, local_ids) -> np.ndarray:
+        return self.clients[np.asarray(local_ids)]

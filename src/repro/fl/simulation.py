@@ -33,6 +33,7 @@ from repro.core.selection import POLICIES, policy_uses_rl
 from repro.data.pipeline import ClientDataset, eval_batches
 from repro.fl import client as client_mod
 from repro.fl import server as server_mod
+from repro.kernels import ops as kernel_ops
 from repro.optim import optimizers as opt_mod
 from repro.privacy import dp as dp_mod
 from repro.privacy import quantize, secure_agg
@@ -128,11 +129,14 @@ class Simulation:
         """Plain or privacy-preserving aggregation of k-stacked deltas -> MEAN."""
         cfg = self.cfg
         k = len(weights)
+        # independent streams for the one-time-pad masks and the DP noise —
+        # reusing one key would correlate the pads with the Gaussian draw
+        k_mask, k_noise = jax.random.split(key)
         if cfg.dp is not None:
             # client-level DP: clip each delta, uniform weights, noise on sum
             clipped = jax.vmap(lambda d: dp_mod.clip_update(d, cfg.dp.clip)[0])(stacked)
-            summed = self._sum(clipped, k, key, cfg.dp.clip, cfg.dp.bits)
-            noised = dp_mod.add_noise(key, summed, cfg.dp)
+            summed = self._sum(clipped, k, k_mask, cfg.dp.clip, cfg.dp.bits)
+            noised = dp_mod.add_noise(k_noise, summed, cfg.dp)
             return tree_scale(noised, 1.0 / k)
         w = jnp.asarray(np.asarray(weights, np.float64) / np.sum(weights), jnp.float32)
         if cfg.secure_agg:
@@ -140,28 +144,66 @@ class Simulation:
             scaled = jax.tree.map(
                 lambda d: d * (w * k).reshape((k,) + (1,) * (d.ndim - 1)), stacked
             )
-            summed = self._sum(scaled, k, key, cfg.sa_clip, cfg.sa_bits)
+            summed = self._sum(scaled, k, k_mask, cfg.sa_clip, cfg.sa_bits)
             return tree_scale(summed, 1.0 / k)
-        return jax.tree.map(lambda d: jnp.einsum("k...,k->...", d, w), stacked)
+        return self._weighted_sum(stacked, w)
 
-    def _sum(self, stacked: PyTree, k: int, key, clip: float, bits: int) -> PyTree:
-        """Masked-ring (homomorphic) sum of k-stacked pytrees (uint32 ring)."""
-        quantize.check_headroom(bits, k)
-        leaves = [d.reshape(k, -1) for d in jax.tree.leaves(stacked)]
-        rows = jnp.concatenate(leaves, axis=1)  # (k, P)
-        qs = quantize.encode(rows, clip, bits)
-        keys = list(jax.random.split(key, k))
-        total = secure_agg.dealer_aggregate(qs, keys)
-        dec = quantize.decode_sum(total, clip, bits, k)
-        # unflatten back into the (unstacked) tree structure
-        sizes = [int(np.prod(d.shape[1:])) for d in jax.tree.leaves(stacked)]
-        shapes = [d.shape[1:] for d in jax.tree.leaves(stacked)]
-        dtypes = [d.dtype for d in jax.tree.leaves(stacked)]
+    # -- flat-row plumbing shared by the kernel aggregation paths ----------
+    @staticmethod
+    def _stack_rows(stacked: PyTree) -> jax.Array:
+        """k-stacked pytree -> (k, P) float32 rows (ravel order = tree leaves)."""
+        k = jax.tree.leaves(stacked)[0].shape[0]
+        return jnp.concatenate(
+            [d.reshape(k, -1).astype(jnp.float32) for d in jax.tree.leaves(stacked)],
+            axis=1,
+        )
+
+    @staticmethod
+    def _unstack_rows(stacked: PyTree, flat: jax.Array) -> PyTree:
+        """(P,) vector -> pytree with the (unstacked) structure of ``stacked``."""
+        leaves = jax.tree.leaves(stacked)
         parts, off = [], 0
-        for size, shape, dt in zip(sizes, shapes, dtypes):
-            parts.append(dec[off : off + size].reshape(shape).astype(dt))
+        for d in leaves:
+            size = int(np.prod(d.shape[1:]))
+            parts.append(flat[off : off + size].reshape(d.shape[1:]).astype(d.dtype))
             off += size
         return jax.tree.unflatten(jax.tree.structure(stacked), parts)
+
+    def _weighted_sum(self, stacked: PyTree, w) -> PyTree:
+        """Σ_i w_i·delta_i — the shared sync/async server reduction.
+
+        On TPU this is the fused Pallas buffer-aggregation kernel (one VMEM
+        pass over the flattened (k, P) rows); on CPU the Pallas interpreter
+        would be strictly slower than XLA, so the per-leaf einsum stays the
+        hot path there.  Both engines route through this method, which is
+        what makes the async sync-equivalence anchor bitwise.
+        """
+        if kernel_ops.default_interpret():
+            return jax.tree.map(
+                lambda d: jnp.einsum("k...,k->...", d, jnp.asarray(w, jnp.float32)),
+                stacked,
+            )
+        rows = self._stack_rows(stacked)
+        out = kernel_ops.staleness_aggregate(rows, jnp.asarray(w, jnp.float32))
+        return self._unstack_rows(stacked, out)
+
+    def _sum(self, stacked: PyTree, k: int, key, clip: float, bits: int) -> PyTree:
+        """Masked-ring (homomorphic) sum of k-stacked pytrees (uint32 ring).
+
+        Client side: quantize to the ring and add per-client one-time pads.
+        Server side: the fused Pallas ``masked_aggregate`` kernel performs
+        unmask + dequantize in one pass (interpret mode auto-selected by
+        backend); it only ever sees ciphertexts and the mask streams.
+        """
+        quantize.check_headroom(bits, k)
+        rows = self._stack_rows(stacked)  # (k, P)
+        P = rows.shape[1]
+        qs = quantize.encode(rows, clip, bits)
+        keys = jnp.stack(jax.random.split(key, k))
+        masks = jax.vmap(lambda kk: secure_agg.mask_stream(kk, P))(keys)
+        masked = qs + masks  # uint32 wraps = mod 2^32
+        dec = kernel_ops.masked_aggregate(masked, masks, clip, bits)
+        return self._unstack_rows(stacked, dec)
 
     # ------------------------------------------------------------------
     def evaluate(self, params) -> float:

@@ -2,9 +2,9 @@
 
 Shape plumbing: (B, T, H, hd) model-layout attention -> (B*H, T, hd) kernel
 layout, GQA head mapping, head-dim padding to the 128-lane MXU width, and
-sequence padding to block multiples.  ``interpret`` defaults to True — this
-container is CPU-only; on TPU pass interpret=False (same kernel lowers to
-Mosaic).
+sequence padding to block multiples.  ``interpret`` defaults to None, which
+resolves per-backend: interpreter on CPU (this container), Mosaic lowering
+on TPU.  Pass an explicit bool to override.
 """
 from __future__ import annotations
 
@@ -16,7 +16,17 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import masked_agg as ma
+from repro.kernels import staleness_agg as sa
 from repro.utils import round_up
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on a TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else interpret
 
 
 @functools.partial(
@@ -26,7 +36,7 @@ from repro.utils import round_up
 def flash_attention(
     q, k, v, *, causal: bool = True, window: Optional[int] = None,
     logit_cap: float = 0.0, block_q: int = 128, block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """Flash attention with GQA. q: (B, T, H, hd); k, v: (B, S, K, hd)."""
     B, T, H, hd = q.shape
@@ -49,7 +59,8 @@ def flash_attention(
 
     out = fa.flash_attention_bh(
         qbh, kbh, vbh, causal=causal, window=window, logit_cap=logit_cap,
-        block_q=block_q, block_k=block_k, group=group, seq_k=S, interpret=interpret,
+        block_q=block_q, block_k=block_k, group=group, seq_k=S,
+        interpret=_resolve(interpret),
     )
     out = out.reshape(B, H, T_p, hd_p).transpose(0, 2, 1, 3)
     return out[:, :T, :, :hd].astype(q.dtype)
@@ -57,6 +68,20 @@ def flash_attention(
 
 @functools.partial(jax.jit, static_argnames=("clip", "bits", "block_p", "interpret"))
 def masked_aggregate(masked, masks, clip: float, bits: int, *, block_p: int = 2048,
-                     interpret: bool = True):
+                     interpret: Optional[bool] = None):
     """Fused unmask+dequantize ring aggregation (see masked_agg.py)."""
-    return ma.masked_aggregate(masked, masks, clip, bits, block_p=block_p, interpret=interpret)
+    return ma.masked_aggregate(
+        masked, masks, clip, bits, block_p=block_p, interpret=_resolve(interpret)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def staleness_aggregate(deltas, weights, *, block_p: int = 2048,
+                        interpret: Optional[bool] = None):
+    """Fused staleness-weighted buffer aggregation (see staleness_agg.py).
+
+    deltas: (k, P) float32, weights: (k,) -> (P,) Σ_i w_i·delta_i.
+    """
+    return sa.staleness_aggregate(
+        deltas, weights, block_p=block_p, interpret=_resolve(interpret)
+    )

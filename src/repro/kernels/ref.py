@@ -33,6 +33,17 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: Optional[int] =
     return o.reshape(B, T, H, hd).astype(q.dtype)
 
 
+def staleness_aggregate_ref(deltas, weights):
+    """Reference staleness-weighted buffer aggregation.
+
+    deltas: (k, P) float32, weights: (k,) float32.  Returns float32 (P,):
+        Σ_i w_i · delta_i
+    """
+    return jnp.einsum(
+        "kp,k->p", deltas.astype(jnp.float32), weights.astype(jnp.float32)
+    )
+
+
 def masked_aggregate_ref(masked, masks, clip: float, bits: int):
     """Reference fused unmask+dequantize.
 

@@ -1,0 +1,190 @@
+"""Async + hierarchical runtime: sync-equivalence anchor, staleness weights,
+hierarchy round-trip, and the fused Pallas staleness_agg kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import scheduler
+from repro.data.partition import dirichlet_partition
+from repro.data.pipeline import build_clients
+from repro.data.synthetic import MNIST_LIKE, make_image_dataset
+from repro.fl.async_runtime import AsyncFLConfig, AsyncHierSimulation
+from repro.fl.hierarchy import assign_regions, staleness_weight, subfleet
+from repro.fl.simulation import FLConfig, Simulation
+from repro.kernels import ops, ref
+from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
+
+
+def _setup(n_clients=6, n_train=800, n_test=512):
+    data = make_image_dataset(MNIST_LIKE, seed=1, n_train=n_train, n_test=n_test)
+    parts = dirichlet_partition(data["train"]["label"], n_clients, 0.5, seed=1)
+    clients = build_clients(data["train"], parts)
+    rcfg = ResNetConfig(name="t", widths=(8, 16), depths=(1, 1), in_channels=1, num_classes=10)
+    params = init_resnet(jax.random.PRNGKey(0), rcfg)
+    loss_fn = lambda p, b: resnet_loss(p, rcfg, b)
+    eval_fn = lambda p, b: resnet_loss(p, rcfg, b)[1]
+    return data, clients, params, loss_fn, eval_fn
+
+
+# ---------------------------------------------------------------------------
+# Pallas staleness_agg kernel vs jnp.einsum reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,P", [(4, 1000), (8, 5000), (16, 2048), (3, 7777), (1, 129)])
+def test_staleness_agg_kernel_matches_einsum(k, P):
+    rng = np.random.default_rng(k * 31 + P)
+    deltas = jnp.asarray(rng.normal(0, 0.1, (k, P)).astype(np.float32))
+    taus = rng.integers(0, 8, k)
+    weights = jnp.asarray(staleness_weight(taus).astype(np.float32))
+    out = ops.staleness_aggregate(deltas, weights)
+    expect = ref.staleness_aggregate_ref(deltas, weights)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5, rtol=1e-5)
+
+
+def test_staleness_agg_kernel_block_sizes():
+    rng = np.random.default_rng(0)
+    deltas = jnp.asarray(rng.normal(0, 0.1, (5, 3001)).astype(np.float32))
+    weights = jnp.asarray(rng.uniform(0.1, 1.0, 5).astype(np.float32))
+    expect = ref.staleness_aggregate_ref(deltas, weights)
+    for bp in (256, 1024, 4096):
+        out = ops.staleness_aggregate(deltas, weights, block_p=bp)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Staleness weights
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_weight_shape_and_monotone():
+    taus = np.arange(0, 12)
+    w = staleness_weight(taus, cap=10)
+    assert w[0] == 1.0  # fresh delta keeps full weight
+    assert np.all(np.diff(w) <= 0)  # never up-weights staler deltas
+    np.testing.assert_allclose(w, 1.0 / np.sqrt(1.0 + np.minimum(taus, 10)))
+    # cap clamps: tau=11 weighs the same as tau=10
+    assert w[-1] == w[-2]
+
+
+# ---------------------------------------------------------------------------
+# Hierarchy: region assignment + sub-fleet views
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_regions", [1, 2, 3, 5])
+def test_assign_regions_partitions_fleet(n_regions):
+    from repro.core.carbon import make_fleet
+
+    fleet = make_fleet(jax.random.PRNGKey(0), 17)
+    regions = assign_regions(fleet, n_regions)
+    allids = np.concatenate(regions)
+    assert len(allids) == 17 and len(np.unique(allids)) == 17
+    assert all(len(r) > 0 for r in regions)
+    sub = subfleet(fleet, regions[0])
+    np.testing.assert_array_equal(
+        np.asarray(sub.capability), np.asarray(fleet.capability)[regions[0]]
+    )
+
+
+def test_topk_mask_exact_k_on_ties():
+    # tied scores used to inflate the cohort beyond k (scores >= kth)
+    mask = scheduler.topk_mask(jnp.ones(10), 3)
+    assert int(jnp.sum(mask)) == 3
+    mask = scheduler.topk_mask(jnp.asarray([1.0, 2.0, 2.0, 2.0, 0.0]), 2)
+    assert int(jnp.sum(mask)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Sync-equivalence anchor: zero latency spread, K = clients_per_round,
+# one region, edge_sync_every=1 reproduces the synchronous engine.
+# ---------------------------------------------------------------------------
+
+
+def _equiv_configs(**variant):
+    base = dict(n_clients=6, clients_per_round=3, rounds=4, local_steps=2,
+                batch_size=16, eval_every=2, seed=3, **variant)
+    return FLConfig(**base), AsyncFLConfig(latency_spread=0.0, **base)
+
+
+@pytest.mark.parametrize("variant", [
+    dict(algorithm="fedavg", selection="random"),
+    dict(algorithm="fedadam", selection="rl_green", server_lr=0.02),
+])
+def test_sync_equivalence(variant):
+    data, clients, params, loss_fn, eval_fn = _setup()
+    cfg_s, cfg_a = _equiv_configs(**variant)
+    h_s = Simulation(cfg_s, loss_fn, eval_fn, params, clients, data["test"]).run()
+    h_a = AsyncHierSimulation(cfg_a, loss_fn, eval_fn, params, clients, data["test"]).run()
+    assert abs(h_s["final_acc"] - h_a["final_acc"]) < 1e-3
+    np.testing.assert_allclose(h_s["acc"], h_a["acc"], atol=1e-3)
+    np.testing.assert_allclose(h_s["loss"], h_a["loss"], atol=1e-5)
+    assert h_s["selected"] == h_a["selected"]
+    assert all(s == 0.0 for s in h_a["staleness"])  # nothing is ever stale
+
+
+def test_sync_equivalence_secure_agg():
+    """1 region + masked-ring aggregation == the flat secure-agg engine."""
+    data, clients, params, loss_fn, eval_fn = _setup()
+    cfg_s, cfg_a = _equiv_configs(algorithm="fedavg", selection="random",
+                                  secure_agg=True, sa_bits=24)
+    h_s = Simulation(cfg_s, loss_fn, eval_fn, params, clients, data["test"]).run()
+    h_a = AsyncHierSimulation(cfg_a, loss_fn, eval_fn, params, clients, data["test"]).run()
+    assert abs(h_s["final_acc"] - h_a["final_acc"]) < 1e-3
+    np.testing.assert_allclose(h_s["loss"], h_a["loss"], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# General async behavior
+# ---------------------------------------------------------------------------
+
+
+def test_async_staleness_emerges_with_overlap():
+    """Double concurrency + small buffer: some deltas must arrive stale."""
+    data, clients, params, loss_fn, eval_fn = _setup()
+    cfg = AsyncFLConfig(algorithm="fedavg", selection="random", n_clients=6,
+                        clients_per_round=3, rounds=6, local_steps=2, batch_size=16,
+                        eval_every=3, seed=3, latency_spread=1.0, buffer_k=2,
+                        concurrency=6, n_regions=2, edge_sync_every=2)
+    h = AsyncHierSimulation(cfg, loss_fn, eval_fn, params, clients, data["test"]).run()
+    assert len(h["acc"]) == 6
+    assert max(h["staleness"]) > 0.0
+    assert sorted(h["buffer_flushes"]) == [0, 1]
+    assert sum(h["buffer_flushes"].values()) == 6
+    assert set(h["region"]) == {0, 1}
+    # regional CO2 decomposes the total
+    assert sum(h["co2_by_region_g"].values()) == pytest.approx(h["cum_co2_total_g"])
+    assert np.isfinite(h["final_acc"])
+    # every flush stays inside its region's client set
+    regions = assign_regions(
+        AsyncHierSimulation(cfg, loss_fn, eval_fn, params, clients, data["test"]).fleet,
+        cfg.n_regions,
+    )
+    for rid, sel in zip(h["region"], h["selected"]):
+        assert set(sel) <= set(regions[rid].tolist())
+
+
+def test_async_multi_flush_per_wave_derives_fresh_keys():
+    """buffer_k < wave size: one wave triggers several flushes, which must
+    consume distinct mask/noise keys (fold_in per trigger) — the first flush
+    keeps the wave key verbatim so the sync-equivalence anchor stays exact."""
+    data, clients, params, loss_fn, eval_fn = _setup(n_train=400, n_test=64)
+    cfg = AsyncFLConfig(algorithm="fedavg", selection="random", n_clients=6,
+                        clients_per_round=4, rounds=4, local_steps=2, batch_size=16,
+                        eval_every=4, seed=5, latency_spread=0.0, buffer_k=2,
+                        concurrency=4, secure_agg=True, sa_bits=24)
+    sim = AsyncHierSimulation(cfg, loss_fn, eval_fn, params, clients, data["test"])
+    h = sim.run()
+    assert len(h["acc"]) == 4
+    # every wave of 4 produced exactly 2 flushes through the K=2 buffer
+    counts = list(sim.regions[0].wave_flushes.values())
+    assert counts and all(c == 2 for c in counts)
+    assert np.isfinite(h["final_acc"])
+
+
+def test_async_rejects_sync_only_algorithms():
+    data, clients, params, loss_fn, eval_fn = _setup(n_train=200, n_test=64)
+    cfg = AsyncFLConfig(algorithm="scaffold", n_clients=6, clients_per_round=2, rounds=1)
+    with pytest.raises(ValueError, match="scaffold"):
+        AsyncHierSimulation(cfg, loss_fn, eval_fn, params, clients, data["test"])

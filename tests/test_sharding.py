@@ -9,9 +9,12 @@ from repro.roofline import hlo_parse
 
 
 def _mesh(multi=False):
-    if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+    shape = (2, 16, 16) if multi else (16, 16)
+    axes = ("pod", "data", "model") if multi else ("data", "model")
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:  # jax<=0.4.x signature: one tuple of (name, size) pairs
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def _sds(shape):

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
-from repro.data.synthetic import CIFAR_LIKE, MNIST_LIKE, make_image_dataset
+from repro.data.synthetic import get_dataset_spec, make_image_dataset
 from repro.fl.simulation import FLConfig, Simulation
 from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
 
@@ -59,7 +59,7 @@ PAPER_LABELS = {
 
 def build_experiment(dataset: str, seed: int = 0, rounds: int = ROUNDS,
                      n_clients: int = N_CLIENTS, fast: bool = False):
-    spec = MNIST_LIKE if dataset == "mnist" else CIFAR_LIKE
+    spec = get_dataset_spec(dataset)  # "mnist(_synthetic)" | "cifar(_synthetic)"
     n_train = N_TRAIN // (3 if fast else 1)
     data = make_image_dataset(spec, seed=seed, n_train=n_train, n_test=N_TEST)
     parts = dirichlet_partition(data["train"]["label"], n_clients, alpha=0.5, seed=seed)

@@ -4,9 +4,21 @@ Wall-times on this CPU container measure the *interpreter*, not TPU perf —
 the derived column therefore reports the roofline-relevant quantities
 (working-set bytes per VMEM block, arithmetic intensity) rather than a
 speedup claim.  Correctness (allclose vs oracle) is asserted on every case.
+
+Besides the human-readable ``name,us_per_call,derived`` CSV, every run
+appends machine-readable records and ``main()`` writes them to
+``BENCH_kernels.json`` (op, shape, backend, ms, GB/s) so the perf
+trajectory stays diffable across PRs; CI uploads the file as an artifact.
+
+The aggregation benches exercise the kernels on the flat-row
+representation the FL runtime actually dispatches: ``(k, P)`` float32 /
+uint32 rows built through ``repro.fl.paramspace.ParamSpace`` (stack +
+block padding), not ad-hoc arrays.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -14,8 +26,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_line
+from repro.fl.paramspace import ParamSpace
 from repro.kernels import ops, ref
 from repro.privacy import quantize, secure_agg
+
+RECORDS: list[dict] = []
+
+
+def _backend(kernel: bool) -> str:
+    base = jax.default_backend()
+    if kernel:
+        mode = "pallas-interpret" if ops.default_interpret() else "pallas-mosaic"
+        return f"{base}:{mode}"
+    return f"{base}:xla-ref"
+
+
+def _record(op: str, shape, us: float, bytes_moved: float, kernel: bool) -> None:
+    RECORDS.append({
+        "op": op,
+        "shape": list(shape),
+        "backend": _backend(kernel),
+        "ms": us / 1e3,
+        "gb_per_s": bytes_moved / (us * 1e-6) / 1e9 if us > 0 else 0.0,
+    })
 
 
 def _time(fn, *args, reps=3):
@@ -24,6 +57,29 @@ def _time(fn, *args, reps=3):
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.time() - t0) / reps * 1e6
+
+
+def _row_space(P: int, seed: int) -> ParamSpace:
+    """A ParamSpace whose flat dim is exactly P (a tree of 1-D chunks) —
+    the benches go through stack()/pad_rows() like the FL engines do."""
+    sizes, left, i = [], P, 0
+    rng = np.random.default_rng(seed)
+    while left > 0:
+        s = min(left, int(rng.integers(1000, 50_000)))
+        sizes.append(s)
+        left -= s
+        i += 1
+    tree = {f"leaf{j}": jnp.zeros((s,), jnp.float32) for j, s in enumerate(sizes)}
+    return ParamSpace.build(tree)
+
+
+def _stacked_rows(pspace: ParamSpace, k: int, seed: int) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    stacked = {
+        f"leaf{j}": jnp.asarray(rng.normal(0, 0.05, (k, s)).astype(np.float32))
+        for j, s in enumerate(pspace.sizes)
+    }
+    return pspace.stack(stacked)
 
 
 def bench_flash(B=1, T=512, H=4, K=2, hd=64, block=128):
@@ -38,7 +94,10 @@ def bench_flash(B=1, T=512, H=4, K=2, hd=64, block=128):
     us_r = _time(lambda: ref.flash_attention_ref(q, k, v, causal=True))
     vmem_kib = (block * 128 * 4 * 2 + 2 * block * 128 * 4 + block * (128 + 2) * 4) / 1024
     flops = 4 * B * H * T * T * hd / 2  # causal
-    ai = flops / (2 * B * T * (H + 2 * K) * hd * 4)
+    bytes_moved = 2 * B * T * (H + 2 * K) * hd * 4
+    ai = flops / bytes_moved
+    _record("flash_attention", (B, T, H, hd), us_k, bytes_moved, kernel=True)
+    _record("flash_attention", (B, T, H, hd), us_r, bytes_moved, kernel=False)
     rows = [
         csv_line(f"flash_attn_pallas_T{T}", us_k, f"vmem_block_kib={vmem_kib:.0f};arith_intensity={ai:.0f}"),
         csv_line(f"flash_attn_xla_ref_T{T}", us_r, "materializes_TxT=1"),
@@ -47,28 +106,32 @@ def bench_flash(B=1, T=512, H=4, K=2, hd=64, block=128):
 
 
 def bench_masked_agg(n=16, P=262144, bits=16):
-    rng = np.random.default_rng(0)
-    ups = rng.normal(0, 0.05, (n, P)).astype(np.float32)
-    qs = jnp.stack([quantize.encode(jnp.asarray(u), 1.0, bits) for u in ups])
-    keys = list(jax.random.split(jax.random.PRNGKey(7), n))
-    masked = jnp.stack([secure_agg.mask_update(q, k) for q, k in zip(qs, keys)])
-    masks = jnp.stack([secure_agg.mask_stream(k, P) for k in keys])
+    """Secure-agg hot path on ParamSpace rows: unmask + dequantize fused."""
+    pspace = _row_space(P, seed=n)
+    ups = _stacked_rows(pspace, n, seed=0)
+    qs = quantize.encode(pspace.pad_rows(ups), 1.0, bits)
+    masks = secure_agg.mask_rows(jax.random.PRNGKey(7), n, pspace.padded_dim)
+    masked = qs + masks
     out = ops.masked_aggregate(masked, masks, 1.0, bits)
     expect = ref.masked_aggregate_ref(masked, masks, 1.0, bits)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-6)
     us_k = _time(lambda: ops.masked_aggregate(masked, masks, 1.0, bits))
     us_r = _time(lambda: ref.masked_aggregate_ref(masked, masks, 1.0, bits))
-    bytes_moved = 2 * n * P * 4 + P * 4
+    Pp = pspace.padded_dim
+    bytes_moved = 2 * n * Pp * 4 + Pp * 4
+    _record("masked_agg", (n, Pp), us_k, bytes_moved, kernel=True)
+    _record("masked_agg", (n, Pp), us_r, bytes_moved, kernel=False)
     return [
-        csv_line(f"masked_agg_pallas_n{n}_P{P}", us_k, f"bytes={bytes_moved};fused_unmask_dequant=1"),
-        csv_line(f"masked_agg_xla_ref_n{n}_P{P}", us_r, "separate_pass=1"),
+        csv_line(f"masked_agg_pallas_n{n}_P{Pp}", us_k, f"bytes={bytes_moved};fused_unmask_dequant=1"),
+        csv_line(f"masked_agg_xla_ref_n{n}_P{Pp}", us_r, "separate_pass=1"),
     ]
 
 
 def bench_staleness_agg(k=16, P=262144):
-    """Async-runtime hot path: Σ_i w_i·delta_i over the K-deep buffer."""
+    """Async-runtime hot path: Σ_i w_i·row_i over the K-deep rows buffer."""
+    pspace = _row_space(P, seed=k)
+    deltas = pspace.pad_rows(_stacked_rows(pspace, k, seed=1))
     rng = np.random.default_rng(1)
-    deltas = jnp.asarray(rng.normal(0, 0.05, (k, P)).astype(np.float32))
     taus = rng.integers(0, 8, k)
     weights = jnp.asarray((1.0 / np.sqrt(1.0 + taus)).astype(np.float32))
     out = ops.staleness_aggregate(deltas, weights)
@@ -77,18 +140,22 @@ def bench_staleness_agg(k=16, P=262144):
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
     us_k = _time(lambda: ops.staleness_aggregate(deltas, weights))
     us_r = _time(lambda: ref.staleness_aggregate_ref(deltas, weights))
-    bytes_moved = k * P * 4 + P * 4
+    Pp = pspace.padded_dim
+    bytes_moved = k * Pp * 4 + Pp * 4
+    _record("staleness_agg", (k, Pp), us_k, bytes_moved, kernel=True)
+    _record("staleness_agg", (k, Pp), us_r, bytes_moved, kernel=False)
     return [
         csv_line(
-            f"staleness_agg_pallas_k{k}_P{P}", us_k,
+            f"staleness_agg_pallas_k{k}_P{Pp}", us_k,
             f"bytes={bytes_moved};parity_max_abs_err={err:.2e};"
             f"ref_over_kernel_speedup={us_r / us_k:.2f}x",
         ),
-        csv_line(f"staleness_agg_xla_ref_k{k}_P{P}", us_r, "einsum_reference=1"),
+        csv_line(f"staleness_agg_xla_ref_k{k}_P{Pp}", us_r, "einsum_reference=1"),
     ]
 
 
-def main():
+def main(out_json: str | None = "BENCH_kernels.json"):
+    RECORDS.clear()
     rows = []
     rows += bench_flash(T=256)
     rows += bench_flash(T=512)
@@ -98,8 +165,16 @@ def main():
     rows += bench_staleness_agg(k=16, P=262144)
     for r in rows:
         print(r)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(RECORDS, f, indent=1)
+        print(f"wrote {len(RECORDS)} records -> {out_json}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="machine-readable output path ('' disables)")
+    args = ap.parse_args()
+    main(out_json=args.json or None)

@@ -35,7 +35,8 @@ def main() -> None:
 
     failures = []
     if not args.skip_tables:
-        for ds in ("mnist", "cifar"):
+        # registry names from repro.data.synthetic.DATASETS (paper §IV: both)
+        for ds in ("mnist_synthetic", "cifar_synthetic"):
             try:
                 _, checks = table_compare.main(ds, fast=args.fast, out=f"results/table_{ds}.json")
                 failures += [c for c in checks if c.startswith("[FAIL]")]

@@ -65,7 +65,7 @@ def validate_claims(results: dict) -> list[str]:
 
 
 def main(dataset: str, fast: bool = False, out: str | None = None):
-    table_no = "I" if dataset == "mnist" else "II"
+    table_no = "I" if "mnist" in dataset else "II"
     print(f"=== Table {table_no} ({dataset}-like, reduced protocol) ===")
     results = run_table(dataset, fast=fast)
     checks = validate_claims(results)

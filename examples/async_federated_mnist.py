@@ -18,7 +18,7 @@ import jax
 
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
-from repro.data.synthetic import MNIST_LIKE, make_image_dataset
+from repro.data.synthetic import DATASETS, get_dataset_spec, make_image_dataset
 from repro.fl.async_runtime import AsyncFLConfig, AsyncHierSimulation
 from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
 
@@ -34,6 +34,7 @@ VARIANTS = {
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--variant", choices=list(VARIANTS), default="metafed_full")
+    ap.add_argument("--dataset", default="mnist_synthetic", choices=sorted(DATASETS))
     ap.add_argument("--rounds", type=int, default=30, help="global buffer flushes")
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--per-round", type=int, default=4, help="wave/cohort size")
@@ -48,10 +49,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    data = make_image_dataset(MNIST_LIKE, seed=args.seed, n_train=8000, n_test=1500)
+    spec = get_dataset_spec(args.dataset)
+    data = make_image_dataset(spec, seed=args.seed, n_train=8000, n_test=1500)
     parts = dirichlet_partition(data["train"]["label"], args.clients, alpha=0.5, seed=args.seed)
     clients = build_clients(data["train"], parts)
-    rcfg = ResNetConfig(name="rt", widths=(16, 32), depths=(2, 2), in_channels=1, num_classes=10)
+    rcfg = ResNetConfig(name="rt", widths=(16, 32), depths=(2, 2),
+                        in_channels=spec.shape[2], num_classes=spec.n_classes)
     params = init_resnet(jax.random.PRNGKey(args.seed), rcfg)
 
     cfg = AsyncFLConfig(

@@ -1,11 +1,12 @@
-"""End-to-end driver: the paper's Table I experiment at configurable scale.
+"""End-to-end driver: the paper's Table I/II experiments at configurable scale.
 
-Runs any of the six evaluation variants on the MNIST-like benchmark with the
-paper's protocol structure (Dirichlet(0.5) non-IID, 20%-ish participation,
-momentum clients, optional secure aggregation and client-level DP at the
-paper's (1.2, 1e-5) budget).
+Runs any of the six evaluation variants on the MNIST-like or CIFAR-10-like
+benchmark (paper §IV evaluates both) with the paper's protocol structure
+(Dirichlet(0.5) non-IID, 20%-ish participation, momentum clients, optional
+secure aggregation and client-level DP at the paper's (1.2, 1e-5) budget).
 
     PYTHONPATH=src python examples/federated_mnist.py --variant metafed_full --rounds 30
+    PYTHONPATH=src python examples/federated_mnist.py --dataset cifar_synthetic --rounds 30
     PYTHONPATH=src python examples/federated_mnist.py --variant fedavg --dp
 """
 import argparse
@@ -14,7 +15,7 @@ import jax
 
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
-from repro.data.synthetic import MNIST_LIKE, make_image_dataset
+from repro.data.synthetic import DATASETS, get_dataset_spec, make_image_dataset
 from repro.fl.simulation import FLConfig, Simulation
 from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
 from repro.privacy.dp import DPConfig, calibrated
@@ -34,6 +35,8 @@ VARIANTS = {
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--variant", choices=list(VARIANTS), default="metafed_full")
+    ap.add_argument("--dataset", default="mnist_synthetic", choices=sorted(DATASETS),
+                    help="paper Table I (MNIST-like) or Table II (CIFAR-10-like)")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--clients", type=int, default=16)
     ap.add_argument("--per-round", type=int, default=4)
@@ -43,10 +46,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    data = make_image_dataset(MNIST_LIKE, seed=args.seed, n_train=8000, n_test=1500)
+    spec = get_dataset_spec(args.dataset)
+    data = make_image_dataset(spec, seed=args.seed, n_train=8000, n_test=1500)
     parts = dirichlet_partition(data["train"]["label"], args.clients, alpha=0.5, seed=args.seed)
     clients = build_clients(data["train"], parts)
-    rcfg = ResNetConfig(name="rt", widths=(16, 32), depths=(2, 2), in_channels=1, num_classes=10)
+    rcfg = ResNetConfig(name="rt", widths=(16, 32), depths=(2, 2),
+                        in_channels=spec.shape[2], num_classes=spec.n_classes)
     params = init_resnet(jax.random.PRNGKey(args.seed), rcfg)
 
     dp = None

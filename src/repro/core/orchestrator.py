@@ -38,6 +38,8 @@ GAMMA_CO2 = 1.0
 EPS_MIN = 0.01
 EPS_DECAY = 0.98
 LAMBDA_GREEN = 0.05
+LAMBDA_STALE = 0.05   # straggler demotion per unit of staleness EMA
+STALE_EMA_BETA = 0.8  # EMA decay of the observed per-provider staleness
 Q_LR = 0.10
 Q_DISCOUNT = 0.90
 
@@ -54,6 +56,7 @@ class OrchestratorState(NamedTuple):
     last_acc: jax.Array   # scalar, previous round accuracy
     last_eff: jax.Array   # scalar, previous round efficiency metric
     state_idx: jax.Array  # scalar int32, discretized s_t of the previous step
+    stale_ema: jax.Array  # (n_providers,) EMA of observed staleness/latency
 
 
 def init_state(n_providers: int, eps0: float = 0.3) -> OrchestratorState:
@@ -64,7 +67,23 @@ def init_state(n_providers: int, eps0: float = 0.3) -> OrchestratorState:
         last_acc=jnp.float32(0.0),
         last_eff=jnp.float32(0.0),
         state_idx=jnp.int32(0),
+        stale_ema=jnp.zeros((n_providers,), jnp.float32),
     )
+
+
+def observe_staleness(st: OrchestratorState, mask, tau) -> OrchestratorState:
+    """Fold an observed per-provider staleness (or normalized latency) sample
+    into the straggler EMA — the async runtime calls this after every buffer
+    flush.  Only the providers in ``mask`` (the flushed cohort) are updated;
+    the EMA extends the MARL state so :func:`select` can demote chronic
+    stragglers *before* dispatch (the reward only ever sees the modeled
+    duration, after the energy is already spent).
+    """
+    tau = jnp.asarray(tau, jnp.float32)
+    mask = jnp.asarray(mask)
+    new = jnp.where(mask, STALE_EMA_BETA * st.stale_ema + (1.0 - STALE_EMA_BETA) * tau,
+                    st.stale_ema)
+    return st._replace(stale_ema=new)
 
 
 def encode_state(mean_intensity, acc_trend_up, mean_util) -> jax.Array:
@@ -109,6 +128,14 @@ def select(
         # bias it as training progresses.  Pure offset: ordering of Eq. 9 is
         # preserved once Q >> 1.
         score = scheduler.priority(1.0 + score, intensity)
+    # straggler demotion: providers with a high observed-staleness EMA are
+    # chronic stragglers whose deltas arrive discounted anyway — spend the
+    # selection budget elsewhere.  Applied AFTER the Eq. 9 priority ratio so
+    # the carbon ordering among demoted providers is preserved (a negative
+    # pre-ratio score would flip under the intensity denominator).  Zero EMA
+    # (sync engine, fresh state) is a bitwise no-op, which keeps the
+    # sync-equivalence anchors exact.
+    score = score - LAMBDA_STALE * st.stale_ema
     kx, kr, ke = jax.random.split(key, 3)
     # 0.15-scale jitter: rotates the greedy pick among near-tied providers
     # across rounds (strict argmax re-selects the same k clients forever,

@@ -36,6 +36,24 @@ class ImageDatasetSpec:
 MNIST_LIKE = ImageDatasetSpec("mnist-like", (28, 28, 1), 10, 60_000, 10_000, 2.2)
 CIFAR_LIKE = ImageDatasetSpec("cifar-like", (32, 32, 3), 10, 50_000, 10_000, 0.8)
 
+# Named benchmark configs (paper §IV evaluates MNIST and CIFAR-10): the
+# registry is what examples/ and benchmarks/ resolve a --dataset flag
+# against.  Short aliases keep the historical "mnist"/"cifar" CLI spellings.
+DATASETS: dict[str, ImageDatasetSpec] = {
+    "mnist_synthetic": MNIST_LIKE,
+    "cifar_synthetic": CIFAR_LIKE,
+    "mnist": MNIST_LIKE,
+    "cifar": CIFAR_LIKE,
+}
+
+
+def get_dataset_spec(name: str) -> ImageDatasetSpec:
+    """Resolve a dataset name/alias to its spec (KeyError lists options)."""
+    try:
+        return DATASETS[name]
+    except KeyError:
+        raise KeyError(f"unknown dataset {name!r}; options: {sorted(DATASETS)}") from None
+
 
 def _smooth_prototypes(rng: np.random.Generator, spec: ImageDatasetSpec) -> np.ndarray:
     """Low-frequency class prototypes (random Fourier features)."""

@@ -11,10 +11,21 @@ aggregation — with an event-driven engine:
     down-weighted by ``1/sqrt(1 + staleness)`` where staleness counts how
     many edge model versions elapsed while the client trained.  The buffer
     reduction runs through the fused Pallas ``staleness_agg`` kernel.
+    Buffered deltas are device-resident ``(P,)`` ParamSpace rows (slices of
+    the cohort trainer's ``(k, P)`` output) — flushes *stream* rows into
+    the kernels; per-client delta pytrees are never materialized host-side.
   * **Edge→global hierarchy** — clients are clustered into phase-coherent
     regions (``repro.fl.hierarchy``); each region has its own carbon trace,
     its own selection-policy + MARL-orchestrator instance, and pushes its
-    accumulated delta to the global server every ``edge_sync_every`` flushes.
+    accumulated delta row to the global server every ``edge_sync_every``
+    flushes, down-weighted by ``1/sqrt(1 + global_staleness)`` where the
+    global staleness counts global model versions applied (by other
+    regions) since this edge last synced.
+  * **Staleness-aware selection** — every flush feeds the observed per-client
+    staleness into the MARL orchestrator's straggler EMA
+    (``orchestrator.observe_staleness``), so the ``rl``/``rl_green``
+    policies learn to demote chronic stragglers, not just the modeled
+    round duration the reward already sees.
   * **Event-driven clock** — client completion times come from the fleet
     capability/bandwidth latency model (``carbon.client_durations_s``),
     scaled by ``latency_spread``, so stragglers, carbon phase and the MARL
@@ -35,7 +46,9 @@ aggregation kernel, same server update — and ``run()`` reproduces
 ``Simulation.run()`` trajectories.  This degenerate mode is the subsystem's
 correctness proof (see ``tests/test_async.py``).  RL-based selection also
 matches because the per-flush efficiency signal is the *modeled* cohort
-duration, not the event clock.
+duration, not the event clock; the straggler EMA stays identically zero
+(staleness never emerges), and the global-staleness weight is identically
+1 (a single region syncing every flush never lags the global model).
 """
 from __future__ import annotations
 
@@ -56,7 +69,7 @@ from repro.fl import client as client_mod
 from repro.fl import hierarchy
 from repro.fl.simulation import FLConfig, Simulation
 from repro.privacy import dp as dp_mod
-from repro.utils import PyTree, tree_add, tree_scale, tree_zeros_like
+from repro.utils import PyTree
 
 
 @dataclasses.dataclass
@@ -111,6 +124,7 @@ class AsyncHierSimulation(Simulation):
         )
 
         root = jax.random.PRNGKey(cfg.seed)
+        self.global_version = 0  # bumped per edge->global server update
         self.regions: list[hierarchy.Region] = []
         for ridx, ids in enumerate(hierarchy.assign_regions(self.fleet, cfg.n_regions)):
             # a single region keeps the root key so its PRNG stream (and
@@ -124,7 +138,7 @@ class AsyncHierSimulation(Simulation):
                 orch_state=orch.init_state(len(ids)),
                 key=key,
                 edge_params=self.server_state.params,
-                edge_accum=tree_zeros_like(params0, jnp.float32),
+                edge_accum=self.pspace.zeros_row(),
             ))
 
     # ------------------------------------------------------------------
@@ -167,7 +181,7 @@ class AsyncHierSimulation(Simulation):
             entry = hierarchy.BufferEntry(
                 client=int(ci), local=int(li), version=reg.version, wave=reg.waves,
                 weight=float(len(self.clients[ci])),
-                delta=jax.tree.map(lambda a, j=j: a[j], res.delta),
+                row=res.rows[j],  # device-resident (P,) slice — no host pytree
                 loss=float(res.loss_last[j]), t_hours=t_hours, k_agg=k_agg,
                 inten=inten,
             )
@@ -182,19 +196,30 @@ class AsyncHierSimulation(Simulation):
 
     # ------------------------------------------------------------------
     def _edge_sync(self, reg: hierarchy.Region) -> None:
-        """Push the region's accumulated delta to the global server.
+        """Push the region's accumulated delta row to the global server.
 
         The accumulator is tracked additively (never re-derived as
-        edge_params - global_params), so with one region and
-        edge_sync_every=1 the global update is bitwise the flat engine's.
+        edge_params - global_params) and the pytree form of the delta is
+        produced exactly once, at the server-update boundary, so with one
+        region and edge_sync_every=1 the global update is bitwise the flat
+        engine's.  The sync is weighted by the *global-tier* staleness
+        ``1/sqrt(1 + tau_g)`` where ``tau_g`` counts global model versions
+        applied since this edge last synced — a region that lagged while
+        others advanced the global model pushes a discounted delta instead
+        of an unweighted one.  tau_g == 0 (single region, or no interleaved
+        syncs) keeps the weight exactly 1.
         """
         if reg.pending == 0:
             return
-        scale = reg.n / self.cfg.n_clients
-        delta = reg.edge_accum if scale == 1.0 else tree_scale(reg.edge_accum, scale)
-        self.server_state = self.server_apply(self.server_state, delta)
+        tau_g = self.global_version - reg.synced_version
+        w_g = float(hierarchy.staleness_weight(tau_g, self.cfg.staleness_cap))
+        scale = w_g * reg.n / self.cfg.n_clients
+        row = reg.edge_accum if scale == 1.0 else reg.edge_accum * scale
+        self.server_state = self.server_apply(self.server_state, self.pspace.unravel(row))
+        self.global_version += 1
+        reg.synced_version = self.global_version
         reg.edge_params = self.server_state.params
-        reg.edge_accum = tree_zeros_like(reg.edge_accum, jnp.float32)
+        reg.edge_accum = self.pspace.zeros_row()
         reg.pending = 0
 
     def _emissions_for(self, entries) -> tuple[float, np.ndarray]:
@@ -226,16 +251,16 @@ class AsyncHierSimulation(Simulation):
         taus = np.asarray([reg.version - e.version for e in entries])
         s = hierarchy.staleness_weight(taus, cfg.staleness_cap)
         eff_w = [e.weight * float(si) for e, si in zip(entries, s)]
-        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *[e.delta for e in entries])
+        rows = jnp.stack([e.row for e in entries])  # (k, P) — stays on device
         # one wave can trigger several flushes (buffer_k < wave size): the
         # first reuses the wave's k_agg verbatim (sync-equivalence anchor),
         # later ones fold the count in so no mask/noise stream ever repeats
         n_prior = reg.wave_flushes.get(trigger.wave, 0)
         reg.wave_flushes[trigger.wave] = n_prior + 1
         k_flush = trigger.k_agg if n_prior == 0 else jax.random.fold_in(trigger.k_agg, n_prior)
-        mean_delta = self._aggregate(stacked, eff_w, k_flush)
-        reg.edge_params = tree_add(reg.edge_params, mean_delta)
-        reg.edge_accum = tree_add(reg.edge_accum, mean_delta)
+        mean_row = self._aggregate(rows, eff_w, k_flush)
+        reg.edge_params = self.pspace.add_to_tree(reg.edge_params, mean_row)
+        reg.edge_accum = reg.edge_accum + mean_row
         reg.version += 1
         reg.flushes += 1
         reg.pending += 1
@@ -277,6 +302,14 @@ class AsyncHierSimulation(Simulation):
             reg.buffer.append(entry)
             while len(reg.buffer) >= self.buffer_k and flushes < cfg.rounds:
                 entries, taus, co2, dur, flush_mask = self._flush(reg, entry)
+                # straggler EMA: observed staleness per flushed client feeds
+                # the MARL state so selection can demote chronic stragglers
+                # (zero in the sync-equivalence regime -> no behavior change).
+                # maximum.at: a client with two entries in one flush records
+                # its worst staleness, not whichever entry came last.
+                tau_vec = np.zeros(reg.n, np.float32)
+                np.maximum.at(tau_vec, [e.local for e in entries], taus)
+                reg.orch_state = orch.observe_staleness(reg.orch_state, flush_mask, tau_vec)
                 cum_co2 += co2
                 flushes += 1
                 if flushes % cfg.eval_every == 0 or flushes == cfg.rounds:

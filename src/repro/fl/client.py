@@ -1,8 +1,12 @@
 """Client-side local training (paper §III-C).
 
 One jitted function runs a client's whole local round — ``lax.scan`` over the
-stacked local batches — and returns the *model delta* (w_local - w_global),
-which is what every aggregation path (plain, masked-ring, Paillier) consumes.
+stacked local batches — and returns the *model delta* (w_local - w_global).
+The cohort trainer flattens the k-stacked deltas into ``(k, P)`` float32
+rows via the experiment's :class:`repro.fl.paramspace.ParamSpace` before
+they leave the jitted call, which is what every aggregation path (plain,
+masked-ring, Paillier, the fused Pallas kernels) consumes — deltas never
+materialize host-side as pytrees.
 
 Supports the paper's client rules:
   * FedAvg        — plain local SGD/momentum
@@ -18,6 +22,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.fl.paramspace import ParamSpace
 from repro.optim.optimizers import Optimizer
 from repro.utils import PyTree, tree_scale, tree_sub, tree_zeros_like
 
@@ -27,6 +32,15 @@ class LocalResult(NamedTuple):
     n_steps: jax.Array   # local step count (FedNova normalization)
     loss_first: jax.Array
     loss_last: jax.Array
+
+
+class CohortResult(NamedTuple):
+    """k-stacked cohort output in the flat-row representation."""
+
+    rows: jax.Array      # (k, P) float32 deltas in ParamSpace ravel order
+    n_steps: jax.Array   # (k,) local step counts (FedNova normalization)
+    loss_first: jax.Array  # (k,)
+    loss_last: jax.Array   # (k,)
 
 
 def make_local_trainer(loss_fn: Callable, opt: Optimizer) -> Callable:
@@ -70,25 +84,30 @@ def make_local_trainer(loss_fn: Callable, opt: Optimizer) -> Callable:
     return run
 
 
-def make_cohort_trainer(loss_fn: Callable, opt: Optimizer) -> Callable:
+def make_cohort_trainer(loss_fn: Callable, opt: Optimizer, pspace: ParamSpace) -> Callable:
     """Vectorized local training: the whole selected cohort in ONE jitted call.
 
     This is both the CPU-simulation fast path (one dispatch per round, XLA
-    batches the per-client work) and the semantic template for the pod-scale
-    ``fl_train_step`` (cohorts vmapped over the mesh data axis — see
-    repro/launch/train.py).
+    batches the per-client work) and the semantic template for the sharded
+    cohort engine (the same vmapped body shard_mapped over the mesh data
+    axis — see repro/launch/cohort.py) and the pod-scale ``fl_train_step``
+    (repro/launch/train.py).
 
     run(params_global, batches, mus, corrections) with a leading cohort axis
     on ``batches`` (k, n_steps, batch, ...), ``mus`` (k,), ``corrections``
-    (k-stacked pytree).  Returns a k-stacked LocalResult.
+    (k-stacked pytree).  Returns a :class:`CohortResult` whose deltas are
+    ``(k, P)`` rows in ``pspace`` — flattened inside the jitted call, so the
+    pytree form of a cohort delta never exists outside the trace.
     """
     single = make_local_trainer(loss_fn, opt)
 
     @jax.jit
-    def run(params_global, batches, mus, corrections):
-        return jax.vmap(lambda b, m, c: single(params_global, b, m, c))(
+    def run(params_global, batches, mus, corrections) -> CohortResult:
+        res = jax.vmap(lambda b, m, c: single(params_global, b, m, c))(
             batches, mus, corrections
         )
+        return CohortResult(pspace.stack(res.delta), res.n_steps,
+                            res.loss_first, res.loss_last)
 
     return run
 

@@ -14,12 +14,21 @@ coherent within a region), each region runs its own edge aggregator with
 
 and edge aggregators periodically push their accumulated delta to the
 global server (every ``edge_sync_every`` edge flushes), scaled by the
-region's client share.
+region's client share and down-weighted by the *global-tier* staleness
+(global model versions that elapsed since the region's last sync).
+
+Buffers and accumulators live in the flat-row representation of
+``repro.fl.paramspace``: a buffered client delta is a device-resident
+``(P,)`` float32 row and the edge accumulator is a single row, so async
+flushes stream straight from the cohort trainer's ``(k, P)`` output into
+the fused aggregation kernels without ever materializing per-client delta
+pytrees host-side.
 
 Degenerate case used as the correctness anchor: ``n_regions=1`` with
 ``edge_sync_every=1`` collapses to the flat topology — the edge delta *is*
 the flush delta (tracked additively, never re-derived by subtraction, so
-the global update is bitwise the flat one).
+the global update is bitwise the flat one, and the global staleness term
+is identically zero).
 """
 from __future__ import annotations
 
@@ -38,7 +47,12 @@ from repro.utils import PyTree
 def staleness_weight(tau, cap: int = 10):
     """FedBuff-style down-weighting: s(τ) = 1/sqrt(1 + min(τ, cap)).
 
-    τ = (edge model version at flush) − (version the client trained on).
+    Used at both tiers of the hierarchy:
+      * client→edge: τ = (edge model version at flush) − (version the
+        client trained on);
+      * edge→global: τ = (global model versions applied since this edge
+        last synced) — so a slow region's accumulated delta is discounted
+        by how far the global model moved under it.
     The cap bounds how far a very stale delta can be discounted so slow
     regions keep contributing signal instead of vanishing.
     """
@@ -74,14 +88,19 @@ def subfleet(fleet: carbon_mod.ProviderFleet, ids: np.ndarray) -> carbon_mod.Pro
 
 @dataclasses.dataclass
 class BufferEntry:
-    """One completed client delta waiting in an edge aggregator's buffer."""
+    """One completed client delta waiting in an edge aggregator's buffer.
+
+    The delta is a device-resident ``(P,)`` float32 ParamSpace row (a slice
+    of the cohort trainer's ``(k, P)`` output) — buffering never pulls a
+    pytree to the host, so flushes stream rows straight into the kernels.
+    """
 
     client: int          # global client id
     local: int           # region-local index (for the sub-fleet/policy mask)
     version: int         # edge model version the client trained on
     wave: int            # dispatch-wave index (key derivation per flush)
     weight: float        # data-size weight n_i
-    delta: PyTree        # w_local - w_edge (trained against `version`)
+    row: jax.Array       # (P,) flat w_local - w_edge (trained against `version`)
     loss: float
     t_hours: float       # carbon-phase time of the dispatching wave
     k_agg: jax.Array     # aggregation key of the dispatching wave
@@ -99,12 +118,13 @@ class Region:
     orch_state: orch.OrchestratorState  # this region's MARL state
     key: jax.Array                      # region PRNG stream
     edge_params: PyTree                 # current edge model
-    edge_accum: PyTree                  # Σ flush deltas since last global sync
+    edge_accum: jax.Array               # (P,) row: Σ flush deltas since last global sync
     version: int = 0                    # bumped per buffer flush
     waves: int = 0                      # dispatch waves issued
     flushes: int = 0                    # buffer flushes applied
     pending: int = 0                    # flushes not yet synced to global
     inflight: int = 0                   # clients currently training
+    synced_version: int = 0             # global model version at last edge sync
     buffer: list = dataclasses.field(default_factory=list)
     co2_g: float = 0.0                  # cumulative regional emissions
     # flushes already triggered per wave: the first flush a wave triggers

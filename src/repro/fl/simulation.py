@@ -5,10 +5,16 @@ Wires every subsystem together for one experiment run:
     data partition (Dirichlet non-IID)        repro.data.partition
     provider fleet + carbon model (Eq. 1/8)   repro.core.carbon
     client selection (random/green/rl/rl+g)   repro.core.selection
-    local training (FedAvg/Prox/SCAFFOLD)     repro.fl.client
+    local training (FedAvg/Prox/SCAFFOLD)     repro.fl.client (or the
+                                              sharded engine, launch.cohort)
     privacy pipeline (clip->quant->mask->DP)  repro.privacy.*
     server optimizer (FedAvg/Adam/Yogi/Nova)  repro.fl.server
     MARL update (Eq. 3-5)                     repro.core.orchestrator
+
+Dataflow is flat-row end to end (repro.fl.paramspace): the cohort trainer
+returns (k, P) float32 delta rows, the privacy stack clips/quantizes/masks
+rows, the Pallas kernels reduce rows, and the pytree form of an update is
+materialized exactly once — at the server-optimizer boundary.
 
 The paper's protocol: 50 clients, 10 per round (20%), 5 local epochs,
 batch 32, 100 rounds, Dirichlet(0.5).  We fix the local step count per round
@@ -33,17 +39,19 @@ from repro.core.selection import POLICIES, policy_uses_rl
 from repro.data.pipeline import ClientDataset, eval_batches
 from repro.fl import client as client_mod
 from repro.fl import server as server_mod
+from repro.fl.paramspace import ParamSpace
 from repro.kernels import ops as kernel_ops
 from repro.optim import optimizers as opt_mod
 from repro.privacy import dp as dp_mod
 from repro.privacy import quantize, secure_agg
-from repro.utils import PyTree, tree_ravel, tree_scale, tree_unravel, tree_zeros_like
+from repro.utils import PyTree, tree_zeros_like
 
 
 @dataclasses.dataclass
 class FLConfig:
     algorithm: str = "fedavg"     # fedavg | fedprox | fedadam | fedyogi | scaffold | fednova
     selection: str = "random"     # random | green | rl | rl_green
+    sharded: bool = False         # shard cohort training over the mesh data axis
     n_clients: int = 50
     clients_per_round: int = 10
     rounds: int = 100
@@ -89,8 +97,19 @@ class Simulation:
             local_opt = opt_mod.sgd(cfg.client_lr)
         else:
             local_opt = opt_mod.momentum(cfg.client_lr, beta=cfg.client_momentum)
+        # the canonical pytree<->rows mapping every downstream layer shares
+        self.pspace = ParamSpace.build(params0)
         self.trainer = client_mod.make_local_trainer(loss_fn, local_opt)
-        self.cohort_trainer = client_mod.make_cohort_trainer(loss_fn, local_opt)
+        if cfg.sharded:
+            from repro.launch import cohort as cohort_mod  # lazy: touches devices
+
+            self.cohort_trainer = cohort_mod.make_sharded_cohort_trainer(
+                loss_fn, local_opt, self.pspace
+            )
+        else:
+            self.cohort_trainer = client_mod.make_cohort_trainer(
+                loss_fn, local_opt, self.pspace
+            )
         self.server_state, self.server_apply = server_mod.make_server(
             cfg.algorithm, params0, cfg.server_lr
         )
@@ -116,94 +135,71 @@ class Simulation:
             self.round_flops = float(cost.get("flops", 0.0)) or self._fallback_flops(params0)
         except Exception:
             self.round_flops = self._fallback_flops(params0)
-        flat, _ = tree_ravel(params0)
-        self.model_bytes = float(flat.shape[0] * 4)
-        self.param_dim = int(flat.shape[0])
+        self.model_bytes = float(self.pspace.nbytes)
+        self.param_dim = self.pspace.dim
 
     def _fallback_flops(self, params0) -> float:
-        flat, _ = tree_ravel(params0)
-        return 6.0 * flat.shape[0] * self.cfg.batch_size * self.cfg.local_steps
+        return 6.0 * self.pspace.dim * self.cfg.batch_size * self.cfg.local_steps
 
     # ------------------------------------------------------------------
-    def _aggregate(self, stacked: PyTree, weights, key) -> PyTree:
-        """Plain or privacy-preserving aggregation of k-stacked deltas -> MEAN."""
+    def _aggregate(self, rows: jax.Array, weights, key) -> jax.Array:
+        """Plain or privacy-preserving aggregation of (k, P) delta rows -> MEAN row.
+
+        Everything here is row-native: clipping, quantization, masking and
+        the kernel reductions all act on the ParamSpace representation; the
+        pytree form only reappears at the server-update boundary.
+        """
         cfg = self.cfg
         k = len(weights)
         # independent streams for the one-time-pad masks and the DP noise —
         # reusing one key would correlate the pads with the Gaussian draw
         k_mask, k_noise = jax.random.split(key)
         if cfg.dp is not None:
-            # client-level DP: clip each delta, uniform weights, noise on sum
-            clipped = jax.vmap(lambda d: dp_mod.clip_update(d, cfg.dp.clip)[0])(stacked)
+            # client-level DP: clip each row, uniform weights, noise on sum
+            clipped, _ = dp_mod.clip_rows(rows, cfg.dp.clip)
             summed = self._sum(clipped, k, k_mask, cfg.dp.clip, cfg.dp.bits)
             noised = dp_mod.add_noise(k_noise, summed, cfg.dp)
-            return tree_scale(noised, 1.0 / k)
+            return noised * (1.0 / k)
         w = jnp.asarray(np.asarray(weights, np.float64) / np.sum(weights), jnp.float32)
         if cfg.secure_agg:
             # weighted aggregation under masking: clients pre-scale by n_i/sum
-            scaled = jax.tree.map(
-                lambda d: d * (w * k).reshape((k,) + (1,) * (d.ndim - 1)), stacked
-            )
+            scaled = rows * (w * k)[:, None]
             summed = self._sum(scaled, k, k_mask, cfg.sa_clip, cfg.sa_bits)
-            return tree_scale(summed, 1.0 / k)
-        return self._weighted_sum(stacked, w)
+            return summed * (1.0 / k)
+        return self._weighted_sum(rows, w)
 
-    # -- flat-row plumbing shared by the kernel aggregation paths ----------
-    @staticmethod
-    def _stack_rows(stacked: PyTree) -> jax.Array:
-        """k-stacked pytree -> (k, P) float32 rows (ravel order = tree leaves)."""
-        k = jax.tree.leaves(stacked)[0].shape[0]
-        return jnp.concatenate(
-            [d.reshape(k, -1).astype(jnp.float32) for d in jax.tree.leaves(stacked)],
-            axis=1,
-        )
-
-    @staticmethod
-    def _unstack_rows(stacked: PyTree, flat: jax.Array) -> PyTree:
-        """(P,) vector -> pytree with the (unstacked) structure of ``stacked``."""
-        leaves = jax.tree.leaves(stacked)
-        parts, off = [], 0
-        for d in leaves:
-            size = int(np.prod(d.shape[1:]))
-            parts.append(flat[off : off + size].reshape(d.shape[1:]).astype(d.dtype))
-            off += size
-        return jax.tree.unflatten(jax.tree.structure(stacked), parts)
-
-    def _weighted_sum(self, stacked: PyTree, w) -> PyTree:
-        """Σ_i w_i·delta_i — the shared sync/async server reduction.
+    def _weighted_sum(self, rows: jax.Array, w) -> jax.Array:
+        """Σ_i w_i·row_i — the shared sync/async server reduction.
 
         On TPU this is the fused Pallas buffer-aggregation kernel (one VMEM
-        pass over the flattened (k, P) rows); on CPU the Pallas interpreter
-        would be strictly slower than XLA, so the per-leaf einsum stays the
-        hot path there.  Both engines route through this method, which is
-        what makes the async sync-equivalence anchor bitwise.
+        pass over the (k, P) rows, pre-padded to whole blocks by the
+        ParamSpace); on CPU the Pallas interpreter would be strictly slower
+        than XLA, so a single einsum over the rows stays the hot path there.
+        Both engines route through this method, which is what makes the
+        async sync-equivalence anchor bitwise.
         """
+        w = jnp.asarray(w, jnp.float32)
         if kernel_ops.default_interpret():
-            return jax.tree.map(
-                lambda d: jnp.einsum("k...,k->...", d, jnp.asarray(w, jnp.float32)),
-                stacked,
-            )
-        rows = self._stack_rows(stacked)
-        out = kernel_ops.staleness_aggregate(rows, jnp.asarray(w, jnp.float32))
-        return self._unstack_rows(stacked, out)
+            return jnp.einsum("kp,k->p", rows, w)
+        out = kernel_ops.staleness_aggregate(self.pspace.pad_rows(rows), w)
+        return out[: self.pspace.dim]
 
-    def _sum(self, stacked: PyTree, k: int, key, clip: float, bits: int) -> PyTree:
-        """Masked-ring (homomorphic) sum of k-stacked pytrees (uint32 ring).
+    def _sum(self, rows: jax.Array, k: int, key, clip: float, bits: int) -> jax.Array:
+        """Masked-ring (homomorphic) sum of (k, P) delta rows (uint32 ring).
 
-        Client side: quantize to the ring and add per-client one-time pads.
-        Server side: the fused Pallas ``masked_aggregate`` kernel performs
-        unmask + dequantize in one pass (interpret mode auto-selected by
-        backend); it only ever sees ciphertexts and the mask streams.
+        Client side: quantize the rows to the ring and add per-client
+        one-time pads.  Server side: the fused Pallas ``masked_aggregate``
+        kernel performs unmask + dequantize in one pass (interpret mode
+        auto-selected by backend); it only ever sees ciphertexts and the
+        mask streams.  Rows are pre-padded to whole kernel blocks.
         """
         quantize.check_headroom(bits, k)
-        rows = self._stack_rows(stacked)  # (k, P)
-        P = rows.shape[1]
+        rows = self.pspace.pad_rows(rows)
         qs = quantize.encode(rows, clip, bits)
-        keys = jnp.stack(jax.random.split(key, k))
-        masks = jax.vmap(lambda kk: secure_agg.mask_stream(kk, P))(keys)
+        masks = secure_agg.mask_rows(key, k, rows.shape[1])
         masked = qs + masks  # uint32 wraps = mod 2^32
         dec = kernel_ops.masked_aggregate(masked, masks, clip, bits)
-        return self._unstack_rows(stacked, dec)
+        return dec[: self.pspace.dim]
 
     # ------------------------------------------------------------------
     def evaluate(self, params) -> float:
@@ -263,8 +259,10 @@ class Simulation:
 
             c_deltas = []
             if cfg.algorithm == "scaffold":
+                # control-variate updates need per-client pytree deltas: fold
+                # the rows back through the single conversion site
                 for j, ci in enumerate(sel):
-                    delta_j = jax.tree.map(lambda a: a[j], res.delta)
+                    delta_j = self.pspace.unravel(res.rows[j])
                     new_ci = client_mod.scaffold_new_control(
                         self.c_locals[ci], self.server_state.c, delta_j,
                         res.n_steps[j], cfg.client_lr,
@@ -273,10 +271,11 @@ class Simulation:
                     self.c_locals[ci] = new_ci
 
             if cfg.algorithm == "fednova":
-                deltas = [jax.tree.map(lambda a, j=j: a[j], res.delta) for j in range(len(sel))]
+                deltas = [self.pspace.unravel(res.rows[j]) for j in range(len(sel))]
                 mean_delta = server_mod.fednova_mean_delta(deltas, weights, list(res.n_steps))
             else:
-                mean_delta = self._aggregate(res.delta, weights, k_agg)
+                mean_row = self._aggregate(res.rows, weights, k_agg)
+                mean_delta = self.pspace.unravel(mean_row)
             self.server_state = self.server_apply(self.server_state, mean_delta)
             if cfg.algorithm == "scaffold" and c_deltas:
                 self.server_state = server_mod.scaffold_update_c(

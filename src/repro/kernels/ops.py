@@ -69,7 +69,13 @@ def flash_attention(
 @functools.partial(jax.jit, static_argnames=("clip", "bits", "block_p", "interpret"))
 def masked_aggregate(masked, masks, clip: float, bits: int, *, block_p: int = 2048,
                      interpret: Optional[bool] = None):
-    """Fused unmask+dequantize ring aggregation (see masked_agg.py)."""
+    """Fused unmask+dequantize ring aggregation (see masked_agg.py).
+
+    masked, masks: (k, P) uint32 ParamSpace rows -> (P,) float32 ring sum.
+    The FL engines hand in rows pre-padded to whole ``block_p`` blocks
+    (``ParamSpace.pad_rows``), so the kernel's defensive pad is a no-op on
+    the hot path; arbitrary P still works for direct callers.
+    """
     return ma.masked_aggregate(
         masked, masks, clip, bits, block_p=block_p, interpret=_resolve(interpret)
     )
@@ -80,7 +86,9 @@ def staleness_aggregate(deltas, weights, *, block_p: int = 2048,
                         interpret: Optional[bool] = None):
     """Fused staleness-weighted buffer aggregation (see staleness_agg.py).
 
-    deltas: (k, P) float32, weights: (k,) -> (P,) Σ_i w_i·delta_i.
+    deltas: (k, P) float32 ParamSpace rows, weights: (k,) -> (P,)
+    Σ_i w_i·delta_i.  Like :func:`masked_aggregate`, the engines pre-pad
+    rows to whole blocks so no reshaping or padding happens here.
     """
     return sa.staleness_aggregate(
         deltas, weights, block_p=block_p, interpret=_resolve(interpret)

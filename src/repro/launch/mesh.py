@@ -8,6 +8,10 @@ Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
 Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the "pod" axis is the
 hierarchical-FedAvg axis (pod-local aggregate, then cross-pod aggregate —
 MetaFed's edge->cloud topology; see DESIGN.md §2).
+
+The FL engines shard cohort training over the "data" axis through
+``repro.launch.cohort`` (shard_map over this mesh, with a 1-device
+fallback mesh on hosts without a pod — see ``cohort.cohort_mesh``).
 """
 from __future__ import annotations
 

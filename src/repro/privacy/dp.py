@@ -15,6 +15,12 @@ ring-sum (collective) -> decode (server) -> + Gaussian noise (server).  The
 quantizer's rounding error is bounded and *added to the clip bound is NOT
 needed*: rounding is post-clipping and unbiased (stochastic), and its worst
 case is accounted in ``effective_sensitivity``.
+
+Representation: the whole DP pipeline is row-native — a client delta is a
+``(P,)`` float32 row (or a ``(k, P)`` cohort of rows) in the experiment's
+``repro.fl.paramspace.ParamSpace`` layout; clipping and the Gaussian
+mechanism act on rows directly and never flatten or rebuild pytrees
+(``clip_update`` remains for single-client pytree call sites).
 """
 from __future__ import annotations
 
@@ -24,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.privacy import accountant, quantize
-from repro.utils import PyTree, clip_by_global_norm, tree_ravel, tree_unravel
+from repro.utils import PyTree, clip_by_global_norm
 
 
 class DPConfig(NamedTuple):
@@ -44,8 +50,20 @@ def calibrated(cfg: DPConfig) -> "DPConfig":
 
 
 def clip_update(update: PyTree, clip: float):
-    """Client-side L2 clip of a model delta. Returns (clipped, pre-norm)."""
+    """Client-side L2 clip of a model delta pytree. Returns (clipped, pre-norm)."""
     return clip_by_global_norm(update, clip)
+
+
+def clip_rows(rows: jax.Array, clip: float) -> tuple[jax.Array, jax.Array]:
+    """Per-client L2 clip of (k, P) flat delta rows.
+
+    Row-native counterpart of :func:`clip_update`: each row is rescaled to
+    norm <= ``clip``.  Returns (clipped rows, (k,) pre-clip norms).
+    """
+    rows = rows.astype(jnp.float32)
+    norms = jnp.sqrt(jnp.sum(jnp.square(rows), axis=-1, keepdims=True))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+    return rows * scale, norms[..., 0]
 
 
 def effective_sensitivity(cfg: DPConfig, dim: int) -> float:
@@ -53,13 +71,11 @@ def effective_sensitivity(cfg: DPConfig, dim: int) -> float:
     return cfg.clip + quantize.quant_error_bound(cfg.clip, cfg.bits) * (dim**0.5)
 
 
-def add_noise(key, summed: PyTree, cfg: DPConfig) -> PyTree:
-    """Server-side Gaussian mechanism on the summed clipped updates."""
+def add_noise(key, summed: jax.Array, cfg: DPConfig) -> jax.Array:
+    """Server-side Gaussian mechanism on the summed clipped rows (flat (P,))."""
     if cfg.sigma <= 0:
         return summed
-    flat, td = tree_ravel(summed)
-    noise = cfg.sigma * cfg.clip * jax.random.normal(key, flat.shape, jnp.float32)
-    return tree_unravel(td, flat + noise)
+    return summed + cfg.sigma * cfg.clip * jax.random.normal(key, summed.shape, jnp.float32)
 
 
 def spent_epsilon(cfg: DPConfig, rounds_done: int) -> float:

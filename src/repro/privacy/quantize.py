@@ -9,6 +9,10 @@ Aggregating n clients needs ``bits + ceil(log2(n)) <= 32`` so the true sum
 never wraps; :func:`check_headroom` enforces it.  Stochastic rounding keeps
 the quantizer unbiased (E[q] = x·scale), which matters for FedAvg's
 convergence and is what we property-test.
+
+The codec is shape-polymorphic and row-native: the aggregation engines feed
+it ``(k, P)`` ParamSpace delta rows directly (see ``repro.fl.paramspace``) —
+no pytree flattening happens here or in the callers.
 """
 from __future__ import annotations
 

@@ -42,6 +42,18 @@ def mask_stream(key, n: int) -> jax.Array:
     return jax.random.bits(key, (n,), jnp.uint32)
 
 
+def mask_rows(key, k: int, n: int) -> jax.Array:
+    """(k, n) uint32 pad block for a k-client cohort of flat rows.
+
+    Splits ``key`` into k per-client streams — the dealer handing each
+    cohort member its own pad.  This is the rows-native mask source the
+    aggregation engines feed (with the quantized rows) into the fused
+    ``masked_agg`` kernel.
+    """
+    keys = jnp.stack(jax.random.split(key, k))
+    return jax.vmap(lambda kk: mask_stream(kk, n))(keys)
+
+
 def mask_update(q_update: jax.Array, key) -> jax.Array:
     """Client side: ciphertext = (q + pad) mod 2^32."""
     return q_update + mask_stream(key, q_update.shape[0])  # uint32 wraps = mod 2^32

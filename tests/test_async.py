@@ -68,6 +68,38 @@ def test_staleness_weight_shape_and_monotone():
     assert w[-1] == w[-2]
 
 
+def test_observe_staleness_ema_and_straggler_demotion():
+    """The straggler EMA only touches flushed providers, and a high EMA
+    demotes a provider out of the greedy selection."""
+    from repro.core import orchestrator as orch
+    from repro.core.carbon import make_fleet
+
+    st = orch.init_state(4)
+    np.testing.assert_array_equal(np.asarray(st.stale_ema), 0.0)
+    mask = np.array([True, False, True, False])
+    st = orch.observe_staleness(st, mask, np.array([5.0, 9.0, 0.0, 9.0]))
+    np.testing.assert_allclose(
+        np.asarray(st.stale_ema), [(1 - orch.STALE_EMA_BETA) * 5.0, 0.0, 0.0, 0.0]
+    )
+    # chronic straggler: EMA so high the demotion dominates the 0.15 jitter
+    st = st._replace(
+        stale_ema=jnp.asarray([10.0, 0.0, 0.0, 0.0]), eps=jnp.float32(0.0)
+    )
+    fleet = make_fleet(jax.random.PRNGKey(0), 4)
+    inten = jnp.ones(4, jnp.float32) * 100.0
+    sel, _ = orch.select(jax.random.PRNGKey(1), st, fleet, inten, 2,
+                         use_green=False, use_priority=False)
+    assert not bool(sel[0])  # straggler not selected
+    assert int(jnp.sum(sel)) == 2
+    # zero EMA is a bitwise no-op on the scores (sync-equivalence anchor)
+    st0 = orch.init_state(4)._replace(eps=jnp.float32(0.0))
+    sel_a, _ = orch.select(jax.random.PRNGKey(2), st0, fleet, inten, 2,
+                           use_green=False, use_priority=False)
+    sel_b, _ = orch.select(jax.random.PRNGKey(2), st0, fleet, inten, 2,
+                           use_green=False, use_priority=False)
+    np.testing.assert_array_equal(np.asarray(sel_a), np.asarray(sel_b))
+
+
 # ---------------------------------------------------------------------------
 # Hierarchy: region assignment + sub-fleet views
 # ---------------------------------------------------------------------------
@@ -163,6 +195,26 @@ def test_async_staleness_emerges_with_overlap():
     )
     for rid, sel in zip(h["region"], h["selected"]):
         assert set(sel) <= set(regions[rid].tolist())
+
+
+def test_global_staleness_version_accounting():
+    """Multi-region runs interleave edge→global syncs: the server's round
+    counter is exactly the global version, every region's last-sync marker
+    trails it, and the straggler EMA picked up the emergent staleness."""
+    data, clients, params, loss_fn, eval_fn = _setup()
+    cfg = AsyncFLConfig(algorithm="fedavg", selection="rl_green", n_clients=6,
+                        clients_per_round=3, rounds=6, local_steps=2, batch_size=16,
+                        eval_every=3, seed=3, latency_spread=1.0, buffer_k=2,
+                        concurrency=6, n_regions=2, edge_sync_every=2)
+    sim = AsyncHierSimulation(cfg, loss_fn, eval_fn, params, clients, data["test"])
+    h = sim.run()
+    assert sim.global_version == int(sim.server_state.round)  # one bump per apply
+    assert sim.global_version >= 2  # both regions synced at least once
+    for reg in sim.regions:
+        assert 0 < reg.synced_version <= sim.global_version
+    # overlap produced staleness, so some straggler EMA must be non-zero
+    assert max(h["staleness"]) > 0.0
+    assert any(float(jnp.max(reg.orch_state.stale_ema)) > 0.0 for reg in sim.regions)
 
 
 def test_async_multi_flush_per_wave_derives_fresh_keys():

@@ -1,0 +1,97 @@
+"""ParamSpace: the single pytree<->rows conversion site of the FL runtime."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.paramspace import ParamSpace
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "conv": {"w": jnp.asarray(rng.normal(size=(3, 3, 2, 4)).astype(np.float32)),
+                 "b": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))},
+        "head": {"w": jnp.asarray(rng.normal(size=(8, 10)).astype(np.float16)),
+                 "scale": jnp.asarray(np.float32(1.5))},  # 0-d leaf
+    }
+
+
+def test_build_geometry():
+    ps = ParamSpace.build(_tree())
+    assert ps.dim == 3 * 3 * 2 * 4 + 4 + 8 * 10 + 1
+    assert ps.padded_dim % ps.align == 0 and ps.padded_dim >= ps.dim
+    assert ps.offsets[0] == 0
+    assert all(b - a == s for a, b, s in zip(ps.offsets, ps.offsets[1:], ps.sizes))
+    assert ps.nbytes == ps.dim * 4
+    assert ps.matches(_tree(1))
+    assert not ps.matches({"other": jnp.zeros(3)})
+
+
+def test_ravel_unravel_roundtrip_mixed_dtypes():
+    tree = _tree(2)
+    ps = ParamSpace.build(tree)
+    row = ps.ravel(tree)
+    assert row.shape == (ps.dim,) and row.dtype == jnp.float32
+    back = ps.unravel(row)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unravel_accepts_padded_row():
+    tree = _tree(3)
+    ps = ParamSpace.build(tree)
+    padded = ps.pad_row(ps.ravel(tree))
+    assert padded.shape == (ps.padded_dim,)
+    back = ps.unravel(padded)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stack_unstack_roundtrip():
+    k = 5
+    trees = [_tree(10 + i) for i in range(k)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    ps = ParamSpace.build(trees[0])
+    rows = ps.stack(stacked)
+    assert rows.shape == (k, ps.dim)
+    # row j is exactly tree j's ravel
+    for j in range(k):
+        np.testing.assert_array_equal(np.asarray(rows[j]), np.asarray(ps.ravel(trees[j])))
+    back = ps.unstack(rows)
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pad_rows_and_zeros_row():
+    ps = ParamSpace.build(_tree())
+    rows = jnp.ones((3, ps.dim), jnp.float32)
+    padded = ps.pad_rows(rows)
+    assert padded.shape == (3, ps.padded_dim)
+    np.testing.assert_array_equal(np.asarray(padded[:, ps.dim:]), 0.0)
+    np.testing.assert_array_equal(np.asarray(padded[:, : ps.dim]), 1.0)
+    z = ps.zeros_row()
+    assert z.shape == (ps.dim,) and float(jnp.sum(jnp.abs(z))) == 0.0
+
+
+def test_add_to_tree_applies_row_delta():
+    tree = _tree(4)
+    ps = ParamSpace.build(tree)
+    delta = jnp.ones((ps.dim,), jnp.float32)
+    out = ps.add_to_tree(tree, delta)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a) + 1.0, rtol=1e-3)
+
+
+def test_conversions_are_jit_safe():
+    tree = _tree(5)
+    ps = ParamSpace.build(tree)
+
+    @jax.jit
+    def f(t):
+        return ps.unravel(ps.ravel(t))
+
+    back = f(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -97,7 +97,38 @@ def test_dp_clip_and_noise():
     flat, _ = tree_ravel(clipped)
     assert float(jnp.linalg.norm(flat)) <= 1.0 + 1e-5
     cfg = dp.DPConfig(clip=1.0, sigma=2.0)
-    noised = dp.add_noise(jax.random.PRNGKey(0), clipped, cfg)
-    f1, _ = tree_ravel(noised)
-    assert not np.allclose(np.asarray(f1), np.asarray(flat))
+    # the Gaussian mechanism is row-native: it acts on the flat summed row
+    noised = dp.add_noise(jax.random.PRNGKey(0), flat, cfg)
+    assert not np.allclose(np.asarray(noised), np.asarray(flat))
+    assert dp.add_noise(jax.random.PRNGKey(0), flat, dp.DPConfig(sigma=0.0)) is flat
     assert dp.spent_epsilon(dp.DPConfig(sigma=7.03), 100) < 1.25
+
+
+def test_dp_clip_rows_matches_tree_clip():
+    """Row-native per-client clipping == the pytree clip, row by row."""
+    rng = np.random.default_rng(5)
+    rows = jnp.asarray(rng.normal(0, 2.0, (4, 64)).astype(np.float32))
+    clipped, norms = dp.clip_rows(rows, 1.0)
+    assert clipped.shape == rows.shape and norms.shape == (4,)
+    for j in range(4):
+        tree_c, tree_n = dp.clip_update({"w": rows[j]}, 1.0)
+        np.testing.assert_allclose(np.asarray(clipped[j]), np.asarray(tree_c["w"]),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(float(norms[j]), float(tree_n), rtol=1e-6)
+        assert float(jnp.linalg.norm(clipped[j])) <= 1.0 + 1e-5
+    # rows already inside the ball are untouched
+    small = rows * 1e-3
+    out, _ = dp.clip_rows(small, 1.0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(small))
+
+
+def test_mask_rows_matches_per_key_streams():
+    """The cohort pad block is exactly the split-key mask streams."""
+    key = jax.random.PRNGKey(11)
+    block = secure_agg.mask_rows(key, 5, 300)
+    assert block.shape == (5, 300) and block.dtype == jnp.uint32
+    keys = jax.random.split(key, 5)
+    for j in range(5):
+        np.testing.assert_array_equal(
+            np.asarray(block[j]), np.asarray(secure_agg.mask_stream(keys[j], 300))
+        )

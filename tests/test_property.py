@@ -7,10 +7,37 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: skip cleanly, don't break collection
 from hypothesis import given, settings, strategies as st
 
+from repro.fl.paramspace import ParamSpace
 from repro.privacy import quantize, secure_agg
 from repro.utils import clip_by_global_norm, tree_ravel, tree_unravel
 
 SET = dict(max_examples=25, deadline=None)
+
+# -- random pytree strategy for the ParamSpace invariants -------------------
+
+_DTYPES = (np.float32, np.float16, np.int32)
+
+_leaf_shape = st.lists(st.integers(min_value=1, max_value=5), min_size=0, max_size=3).map(tuple)
+
+
+@st.composite
+def _pytrees(draw):
+    """Nested dict pytrees with mixed dtypes and 0-d/1-d/2-d/3-d leaves."""
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    n_leaves = draw(st.integers(min_value=1, max_value=6))
+    tree: dict = {}
+    for i in range(n_leaves):
+        shape = draw(_leaf_shape)
+        dtype = draw(st.sampled_from(_DTYPES))
+        if np.issubdtype(dtype, np.integer):
+            leaf = rng.integers(-1000, 1000, shape).astype(dtype)  # exact in f32
+        else:
+            leaf = rng.normal(0, 2, shape).astype(dtype)
+        node, depth = tree, draw(st.integers(0, 2))
+        for d in range(depth):
+            node = node.setdefault(f"sub{d}", {})  # "sub*" names never hold leaves
+        node[f"leaf{i}"] = jnp.asarray(leaf)
+    return tree
 
 
 @given(
@@ -77,6 +104,42 @@ def test_clip_never_exceeds_bound_and_preserves_direction(max_norm, seed):
     if float(pre) > 0:
         cos = float(jnp.dot(flat_c, flat_o) / (jnp.linalg.norm(flat_c) * jnp.linalg.norm(flat_o) + 1e-12))
         assert cos > 0.9999  # clipping only rescales
+
+
+@given(_pytrees())
+@settings(**SET)
+def test_paramspace_ravel_roundtrip_any_tree(tree):
+    """unravel(ravel(t)) == t for arbitrary nesting, shapes and dtypes."""
+    ps = ParamSpace.build(tree)
+    row = ps.ravel(tree)
+    assert row.shape == (ps.dim,) and row.dtype == jnp.float32
+    back = ps.unravel(row)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(_pytrees(), st.integers(min_value=1, max_value=4))
+@settings(**SET)
+def test_paramspace_stack_roundtrip_and_padding(tree, k):
+    """stack/unstack round-trips k-cohorts; pad_rows only appends zeros."""
+    ps = ParamSpace.build(tree)
+    stacked = jax.tree.map(lambda x: jnp.stack([x + i for i in range(k)]).astype(x.dtype)
+                           if jnp.issubdtype(x.dtype, jnp.floating)
+                           else jnp.stack([x] * k), tree)
+    rows = ps.stack(stacked)
+    assert rows.shape == (k, ps.dim)
+    back = ps.unstack(rows)
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    padded = ps.pad_rows(rows)
+    assert padded.shape == (k, ps.padded_dim) and ps.padded_dim % ps.align == 0
+    np.testing.assert_array_equal(np.asarray(padded[:, ps.dim:]), 0.0)
+    # unravel ignores the padding entirely
+    for a, b in zip(jax.tree.leaves(ps.unravel(padded[0])),
+                    jax.tree.leaves(ps.unravel(rows[0]))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 @given(st.integers(min_value=0, max_value=2**31 - 1))

@@ -22,10 +22,10 @@ import time
 import jax
 import numpy as np
 
+from repro import api
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
 from repro.data.synthetic import get_dataset_spec, make_image_dataset
-from repro.fl.simulation import FLConfig, Simulation
 from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
 
 # reduced protocol (paper values in comments)
@@ -80,16 +80,24 @@ def run_variant(name: str, dataset: str, seed: int = 0, rounds: int = ROUNDS,
         dataset, seed, rounds, fast=fast
     )
     kw = dict(VARIANTS[name])
-    cfg = FLConfig(
-        n_clients=N_CLIENTS, clients_per_round=PER_ROUND,
-        rounds=rounds // (2 if fast else 1), local_steps=LOCAL_STEPS, batch_size=BATCH,
-        client_lr=0.08, eval_every=max(2, rounds // 6), seed=seed,
-        secure_agg=secure_agg and kw.get("algorithm") != "fednova",
-        **kw,
+    algorithm = kw.pop("algorithm")
+    cfg = api.ExperimentConfig(
+        training=api.TrainingConfig(
+            algorithm=algorithm, server_lr=kw.pop("server_lr", 1.0),
+            n_clients=N_CLIENTS, clients_per_round=PER_ROUND,
+            rounds=rounds // (2 if fast else 1), local_steps=LOCAL_STEPS,
+            batch_size=BATCH, client_lr=0.08, eval_every=max(2, rounds // 6),
+            seed=seed,
+        ),
+        privacy=api.PrivacyConfig(secure_agg=secure_agg and algorithm != "fednova"),
+        orchestrator=api.OrchestratorConfig(selection=kw.pop("selection")),
     )
-    sim = Simulation(cfg, loss_fn, eval_fn, params, clients, data["test"])
+    if kw:  # FLConfig(**kw) used to reject these; don't silently drop them
+        raise TypeError(f"unmapped variant keys for {name!r}: {sorted(kw)}")
+    task = api.FederatedTask(loss_fn, eval_fn, params, clients, data["test"])
+    fed = api.build(cfg.to_dict(), task)  # round-trips the JSON-grid path
     t0 = time.time()
-    hist = sim.run()
+    hist = fed.run()
     hist["wall_s"] = time.time() - t0
     hist["variant"] = name
     hist["dataset"] = dataset

@@ -1,12 +1,16 @@
 """Async + hierarchical FL demo: buffered staleness-weighted aggregation
-under a two-tier edge→global topology.
+under a two-tier edge→global topology, selected through ``repro.api`` with
+``TopologyConfig(mode="async_hier")``.
 
 Same MNIST-like benchmark as ``federated_mnist.py``, but the rounds are
 *buffer flushes*: each region's edge aggregator applies an update whenever
 ``--buffer-k`` client deltas arrive (down-weighted 1/sqrt(1+staleness)) and
 syncs to the global server every ``--edge-sync`` flushes.  With
 ``--latency-spread 0 --regions 1`` and buffer-k == per-round cohort size the
-engine degenerates to the synchronous protocol (the correctness anchor).
+strategy degenerates to the synchronous protocol (the correctness anchor).
+``--dp --per-region-accounting`` gives every edge region its own
+subsampled-RDP accountant driven by the privacy pipeline's NoiseStage
+records.
 
     PYTHONPATH=src python examples/async_federated_mnist.py --rounds 30
     PYTHONPATH=src python examples/async_federated_mnist.py \
@@ -16,11 +20,12 @@ import argparse
 
 import jax
 
+from repro import api
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
 from repro.data.synthetic import DATASETS, get_dataset_spec, make_image_dataset
-from repro.fl.async_runtime import AsyncFLConfig, AsyncHierSimulation
 from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
+from repro.privacy.dp import DPConfig, calibrated
 
 VARIANTS = {
     "metafed_full": dict(algorithm="fedavg", selection="rl_green"),
@@ -46,6 +51,10 @@ def main():
     ap.add_argument("--staleness-cap", type=int, default=10)
     ap.add_argument("--latency-spread", type=float, default=1.0)
     ap.add_argument("--secure-agg", action="store_true")
+    ap.add_argument("--dp", action="store_true",
+                    help="client-level DP at the paper budget (eps=1.2, delta=1e-5)")
+    ap.add_argument("--per-region-accounting", action="store_true",
+                    help="one subsampled-RDP accountant per edge region")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -57,25 +66,44 @@ def main():
                         in_channels=spec.shape[2], num_classes=spec.n_classes)
     params = init_resnet(jax.random.PRNGKey(args.seed), rcfg)
 
-    cfg = AsyncFLConfig(
-        rounds=args.rounds, n_clients=args.clients, clients_per_round=args.per_round,
-        local_steps=args.local_steps, batch_size=32, client_lr=0.08,
-        secure_agg=args.secure_agg, eval_every=5, seed=args.seed,
-        buffer_k=args.buffer_k, concurrency=args.concurrency,
-        n_regions=args.regions, edge_sync_every=args.edge_sync,
-        staleness_cap=args.staleness_cap, latency_spread=args.latency_spread,
-        **VARIANTS[args.variant],
+    dp = None
+    if args.dp:
+        dp = calibrated(DPConfig(
+            clip=2.0, target_eps=1.2, delta=1e-5,
+            sample_rate=args.per_round / args.clients, rounds=args.rounds,
+        ))
+
+    variant = dict(VARIANTS[args.variant])
+    cfg = api.ExperimentConfig(
+        training=api.TrainingConfig(
+            algorithm=variant.pop("algorithm"),
+            server_lr=variant.pop("server_lr", 1.0),
+            rounds=args.rounds, n_clients=args.clients,
+            clients_per_round=args.per_round, local_steps=args.local_steps,
+            batch_size=32, client_lr=0.08, eval_every=5, seed=args.seed,
+        ),
+        privacy=api.PrivacyConfig(
+            secure_agg=args.secure_agg, dp=dp,
+            accounting="per_region" if args.per_region_accounting else "global",
+        ),
+        topology=api.TopologyConfig(
+            mode="async_hier", buffer_k=args.buffer_k, concurrency=args.concurrency,
+            n_regions=args.regions, edge_sync_every=args.edge_sync,
+            staleness_cap=args.staleness_cap, latency_spread=args.latency_spread,
+        ),
+        orchestrator=api.OrchestratorConfig(selection=variant.pop("selection")),
     )
-    sim = AsyncHierSimulation(
-        cfg,
+    if variant:
+        raise TypeError(f"unmapped variant keys: {sorted(variant)}")
+    task = api.FederatedTask(
         loss_fn=lambda p, b: resnet_loss(p, rcfg, b),
         eval_fn=lambda p, b: resnet_loss(p, rcfg, b)[1],
         params0=params, clients=clients, test_data=data["test"],
     )
-    hist = sim.run(progress=lambda d: print(
-        f"flush {d['round']:3d}  acc={d['acc']:.3f}  CO2={d['co2_g']:.0f} g", flush=True
-    ))
-    print(f"\n=== {args.variant} (async, {args.regions} region(s), K={sim.buffer_k}) ===")
+    fed = api.Federation(cfg, task, telemetry=[api.ConsoleSink()])
+    hist = fed.run()
+    print(f"\n=== {args.variant} (async, {args.regions} region(s), "
+          f"K={fed.strategy.buffer_k}) ===")
     print(f"final accuracy     : {100*hist['final_acc']:.2f}%")
     print(f"CO2 g/flush (mean) : {hist['mean_co2_g']:.1f}")
     print(f"mean staleness     : {hist['mean_staleness']:.2f}")
@@ -83,6 +111,10 @@ def main():
     print(f"flushes by region  : {hist['buffer_flushes']}")
     print(f"CO2 by region (g)  : { {k: round(v, 1) for k, v in hist['co2_by_region_g'].items()} }")
     print(f"simulated time     : {hist['sim_time_s'][-1]:.0f} s")
+    if args.dp and args.per_region_accounting:
+        print(f"eps by region      : { {k: round(v, 3) for k, v in hist['eps_by_region'].items()} }")
+    elif args.dp:
+        print(f"epsilon spent      : {hist['eps_spent'][-1]:.3f}")
 
 
 if __name__ == "__main__":

@@ -13,10 +13,10 @@ import argparse
 import jax
 import numpy as np
 
+from repro import api
 from repro.configs import base as cfg_base
 from repro.data.pipeline import build_clients
 from repro.data.synthetic import make_markov_tokens
-from repro.fl.simulation import FLConfig, Simulation
 from repro.models import transformer as tf
 
 
@@ -46,13 +46,17 @@ def main():
     loss_fn = lambda p, b: tf.loss_fn(p, cfg, b)
     eval_fn = lambda p, b: tf.loss_fn(p, cfg, b)[1]
 
-    fl = FLConfig(
-        algorithm="fedavg", selection="rl_green", n_clients=args.clients,
-        clients_per_round=3, rounds=args.rounds, local_steps=3, batch_size=8,
-        client_lr=0.05, secure_agg=True, sa_clip=20.0, eval_every=1,
+    fl = api.ExperimentConfig(
+        training=api.TrainingConfig(
+            algorithm="fedavg", n_clients=args.clients, clients_per_round=3,
+            rounds=args.rounds, local_steps=3, batch_size=8, client_lr=0.05,
+            eval_every=1,
+        ),
+        privacy=api.PrivacyConfig(secure_agg=True, sa_clip=20.0),
+        orchestrator=api.OrchestratorConfig(selection="rl_green"),
     )
-    sim = Simulation(fl, loss_fn, eval_fn, params, clients, test)
-    hist = sim.run(progress=lambda d: print(
+    task = api.FederatedTask(loss_fn, eval_fn, params, clients, test)
+    hist = api.Federation(fl, task).run(progress=lambda d: print(
         f"round {d['round']}  token-acc={d['acc']:.3f}  CO2={d['co2_g']:.0f} g", flush=True
     ))
     print(f"\nfinal next-token accuracy: {hist['final_acc']:.3f} "

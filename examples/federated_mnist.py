@@ -3,7 +3,8 @@
 Runs any of the six evaluation variants on the MNIST-like or CIFAR-10-like
 benchmark (paper §IV evaluates both) with the paper's protocol structure
 (Dirichlet(0.5) non-IID, 20%-ish participation, momentum clients, optional
-secure aggregation and client-level DP at the paper's (1.2, 1e-5) budget).
+secure aggregation and client-level DP at the paper's (1.2, 1e-5) budget),
+composed through ``repro.api``.
 
     PYTHONPATH=src python examples/federated_mnist.py --variant metafed_full --rounds 30
     PYTHONPATH=src python examples/federated_mnist.py --dataset cifar_synthetic --rounds 30
@@ -13,10 +14,10 @@ import argparse
 
 import jax
 
+from repro import api
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
 from repro.data.synthetic import DATASETS, get_dataset_spec, make_image_dataset
-from repro.fl.simulation import FLConfig, Simulation
 from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
 from repro.privacy.dp import DPConfig, calibrated
 
@@ -62,21 +63,26 @@ def main():
         ))
         print(f"DP enabled: sigma={dp.sigma:.2f} for (eps=1.2, delta=1e-5) over {args.rounds} rounds")
 
-    cfg = FLConfig(
-        rounds=args.rounds, n_clients=args.clients, clients_per_round=args.per_round,
-        local_steps=args.local_steps, batch_size=32, client_lr=0.08,
-        secure_agg=not args.dp, dp=dp, eval_every=5, seed=args.seed,
-        **VARIANTS[args.variant],
+    variant = dict(VARIANTS[args.variant])
+    cfg = api.ExperimentConfig(
+        training=api.TrainingConfig(
+            algorithm=variant.pop("algorithm"),
+            server_lr=variant.pop("server_lr", 1.0),
+            rounds=args.rounds, n_clients=args.clients,
+            clients_per_round=args.per_round, local_steps=args.local_steps,
+            batch_size=32, client_lr=0.08, eval_every=5, seed=args.seed,
+        ),
+        privacy=api.PrivacyConfig(secure_agg=not args.dp, dp=dp),
+        orchestrator=api.OrchestratorConfig(selection=variant.pop("selection")),
     )
-    sim = Simulation(
-        cfg,
+    if variant:
+        raise TypeError(f"unmapped variant keys: {sorted(variant)}")
+    task = api.FederatedTask(
         loss_fn=lambda p, b: resnet_loss(p, rcfg, b),
         eval_fn=lambda p, b: resnet_loss(p, rcfg, b)[1],
         params0=params, clients=clients, test_data=data["test"],
     )
-    hist = sim.run(progress=lambda d: print(
-        f"round {d['round']:3d}  acc={d['acc']:.3f}  CO2={d['co2_g']:.0f} g", flush=True
-    ))
+    hist = api.Federation(cfg, task, telemetry=[api.ConsoleSink()]).run()
     print(f"\n=== {args.variant} ===")
     print(f"final accuracy     : {100*hist['final_acc']:.2f}%")
     print(f"CO2 g/round (mean) : {hist['mean_co2_g']:.1f}")

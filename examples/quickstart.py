@@ -1,21 +1,28 @@
 """Quickstart: one MetaFed federated round, end to end, in ~a minute on CPU.
 
-Shows the whole pipeline at toy scale: non-IID partition -> carbon-aware
-RL client selection -> local training -> masked (homomorphic) aggregation
--> DP noise -> server update -> emissions accounting.
+Shows the whole ``repro.api`` composition at toy scale: non-IID partition ->
+carbon-aware RL client selection -> local training -> masked (homomorphic)
+aggregation -> server update -> emissions accounting, with a typed
+telemetry sink printing per-round lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--rounds N]
 """
+import argparse
+
 import jax
 
+from repro import api
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
 from repro.data.synthetic import MNIST_LIKE, make_image_dataset
-from repro.fl.simulation import FLConfig, Simulation
 from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=5)
+    args = ap.parse_args()
+
     data = make_image_dataset(MNIST_LIKE, n_train=2000, n_test=400)
     parts = dirichlet_partition(data["train"]["label"], n_clients=8, alpha=0.5)
     clients = build_clients(data["train"], parts)
@@ -24,29 +31,27 @@ def main():
                         in_channels=1, num_classes=10)
     params = init_resnet(jax.random.PRNGKey(0), rcfg)
 
-    cfg = FLConfig(
-        algorithm="fedavg",
-        selection="rl_green",      # the full MetaFed policy (Eq. 3-5, 9)
-        n_clients=8,
-        clients_per_round=3,
-        rounds=5,
-        local_steps=4,
-        batch_size=16,
-        secure_agg=True,           # uint32 one-time-pad masked aggregation
-        eval_every=1,
+    cfg = api.ExperimentConfig(
+        training=api.TrainingConfig(
+            algorithm="fedavg", n_clients=8, clients_per_round=3,
+            rounds=args.rounds, local_steps=4, batch_size=16, eval_every=1,
+        ),
+        # uint32 one-time-pad masked aggregation (scale→quantize→mask stages)
+        privacy=api.PrivacyConfig(secure_agg=True),
+        # the full MetaFed policy (Eq. 3-5, 9)
+        orchestrator=api.OrchestratorConfig(selection="rl_green"),
     )
-    sim = Simulation(
-        cfg,
+    task = api.FederatedTask(
         loss_fn=lambda p, b: resnet_loss(p, rcfg, b),
         eval_fn=lambda p, b: resnet_loss(p, rcfg, b)[1],
         params0=params,
         clients=clients,
         test_data=data["test"],
     )
-    hist = sim.run(progress=lambda d: print(
-        f"round {d['round']:2d}  acc={d['acc']:.3f}  CO2={d['co2_g']:.0f} g  loss={d['loss']:.3f}"
-    ))
-    print(f"\nfinal accuracy      : {hist['final_acc']:.3f}")
+    fed = api.Federation(cfg, task, telemetry=[api.ConsoleSink()])
+    hist = fed.run()
+    print(f"\nprivacy pipeline    : {' -> '.join(fed.ctx.pipeline.describe()) or 'plain'}")
+    print(f"final accuracy      : {hist['final_acc']:.3f}")
     print(f"mean CO2 per round  : {hist['mean_co2_g']:.0f} g")
     print(f"cumulative CO2      : {hist['cum_co2_total_g']:.0f} g")
 

@@ -1,0 +1,54 @@
+"""``repro.api`` — the composable public experiment API.
+
+Quick tour::
+
+    from repro import api
+
+    task = api.FederatedTask(loss_fn, eval_fn, params0, clients, test_data)
+    cfg = api.ExperimentConfig(
+        training=api.TrainingConfig(rounds=30, n_clients=16, clients_per_round=4),
+        privacy=api.PrivacyConfig(secure_agg=True),
+        topology=api.TopologyConfig(mode="async_hier", n_regions=2),
+        orchestrator=api.OrchestratorConfig(selection="rl_green"),
+    )
+    history = api.Federation(cfg, task, telemetry=[api.ConsoleSink(every=5)]).run()
+
+Components (all swappable at the ``Federation`` call site):
+
+    strategy    ``STRATEGIES`` registry: "sync" | "async_hier", or any object
+                implementing the ``Strategy`` protocol
+    selector    ``repro.core.selection.POLICIES`` key, or a callable
+    privacy     a ``PrivacyPipeline`` of row-native stages
+                (``ClipStage → QuantizeStage → MaskStage → NoiseStage``)
+    telemetry   sinks consuming the typed ``RoundEvent``/``FlushEvent`` stream
+
+``build(cfg_or_dict, task)`` is the registry constructor for JSON grids.
+The legacy ``FLConfig``/``Simulation`` entry points survive as deprecation
+shims over this package (see the README migration table).
+"""
+from repro.api.config import (CarbonConfig, ExperimentConfig, OrchestratorConfig,
+                              PrivacyConfig, TopologyConfig, TrainingConfig)
+from repro.api.federation import (STRATEGIES, Federation, Strategy, build,
+                                  register_strategy, strategy_names)
+from repro.api.pipeline import (AggregationContext, ClipStage, MaskStage,
+                                NoiseStage, PrivacyPipeline, QuantizeStage,
+                                ScaleStage, StageRecord, build_pipeline)
+from repro.api.runtime import FederatedTask, RuntimeContext
+from repro.api.telemetry import (CallbackSink, ConsoleSink, FlushEvent,
+                                 HistoryRecorder, RoundEvent, TelemetrySink)
+
+# strategy classes are re-exported for subclass-free composition, but the
+# registry itself stays lazy inside federation.py (import-cycle hygiene)
+from repro.api.async_hier import AsyncHierStrategy  # noqa: E402  isort: skip
+from repro.api.sync import SyncStrategy  # noqa: E402  isort: skip
+
+__all__ = [
+    "AggregationContext", "AsyncHierStrategy", "build", "build_pipeline",
+    "CallbackSink", "CarbonConfig", "ClipStage", "ConsoleSink",
+    "ExperimentConfig", "Federation", "FederatedTask", "FlushEvent",
+    "HistoryRecorder", "MaskStage", "NoiseStage", "OrchestratorConfig",
+    "PrivacyConfig", "PrivacyPipeline", "QuantizeStage", "register_strategy",
+    "RoundEvent", "RuntimeContext", "ScaleStage", "StageRecord", "STRATEGIES",
+    "Strategy", "strategy_names", "SyncStrategy", "TelemetrySink",
+    "TopologyConfig", "TrainingConfig",
+]

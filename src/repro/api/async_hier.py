@@ -1,0 +1,355 @@
+"""Asynchronous + hierarchical strategy (FedBuff-style buffered aggregation).
+
+The event-driven engine from the async runtime PR, lifted out of the legacy
+engine-subclass inheritance chain: it now *composes* the
+shared :class:`~repro.api.runtime.RuntimeContext` (same cohort trainer, same
+privacy pipeline, same server optimizer as the sync strategy) and plugs into
+:class:`~repro.api.federation.Federation` through the ``Strategy`` protocol.
+
+Behavior (unchanged from the engine it replaces):
+
+  * **Buffered async aggregation** — each region's edge aggregator applies an
+    update whenever K client deltas have arrived, each delta down-weighted by
+    ``1/sqrt(1 + staleness)``; the buffer reduction streams device-resident
+    ``(P,)`` ParamSpace rows through the privacy pipeline into the fused
+    Pallas kernels (per-client delta pytrees are never materialized).
+  * **Edge→global hierarchy** — phase-coherent regions
+    (``repro.fl.hierarchy``), each with its own carbon trace, selector +
+    MARL orchestrator instance, syncing its accumulated delta row to the
+    global server every ``edge_sync_every`` flushes, down-weighted by the
+    global-tier staleness.
+  * **Staleness-aware selection** — every flush feeds observed staleness
+    into the orchestrator's straggler EMA (``orchestrator.observe_staleness``).
+  * **Event-driven clock** — completion times from the fleet latency model,
+    scaled by ``latency_spread``.
+
+**Sync-equivalence anchor**: ``latency_spread=0``, ``buffer_k =
+clients_per_round = concurrency``, one region, ``edge_sync_every=1`` makes
+every flush exactly one synchronous round — same PRNG schedule, same
+kernels, same server update — so this strategy reproduces ``SyncStrategy``
+trajectories (see ``tests/test_async.py`` / ``tests/test_api.py``).
+
+**Per-region DP accounting** (``PrivacyConfig.accounting="per_region"``):
+each edge region owns a :class:`~repro.privacy.accountant.SubsampledAccountant`
+fed by the pipeline's ``NoiseStage`` records — the subsampling rate is the
+flushed cohort over the *region's* population, which the global per-flush
+schedule (``accounting="global"``, the default) cannot express.  The
+reported ``eps_spent`` is the worst region's epsilon (a client participates
+in exactly one region, so the worst region bounds every client's loss);
+per-region values land in the ``eps_by_region`` summary.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import ExperimentConfig
+from repro.api.runtime import RuntimeContext
+from repro.api.telemetry import ASYNC_HISTORY_KEYS, FlushEvent
+from repro.core import carbon as carbon_mod
+from repro.core import orchestrator as orch
+from repro.fl import hierarchy
+from repro.privacy import dp as dp_mod
+from repro.privacy.accountant import SubsampledAccountant
+
+
+class AsyncHierStrategy:
+    """Event-driven buffered aggregation under an edge→global hierarchy."""
+
+    name = "async_hier"
+    history_keys = ASYNC_HISTORY_KEYS
+
+    # ------------------------------------------------------------------
+    def validate(self, cfg: ExperimentConfig) -> None:
+        train, topo = cfg.training, cfg.topology
+        if train.algorithm in ("scaffold", "fednova"):
+            raise ValueError(
+                f"{train.algorithm!r} needs synchronized per-cohort state "
+                "(control variates / step normalization) and is not defined "
+                "for buffered-async aggregation; use the sync strategy."
+            )
+        if topo.edge_sync_every < 1:
+            raise ValueError("edge_sync_every must be >= 1")
+        if topo.staleness_cap < 0:
+            raise ValueError("staleness_cap must be >= 0")
+        if topo.buffer_k < 0 or topo.concurrency < 0:
+            raise ValueError("buffer_k and concurrency must be >= 0 (0 = clients_per_round)")
+
+    def setup(self, ctx: RuntimeContext) -> None:
+        train, topo = ctx.train, ctx.topology
+        self.buffer_k = topo.buffer_k or train.clients_per_round
+        self.concurrency = topo.concurrency or train.clients_per_round
+        # constant for the run: per-client latency vector the event clock draws from
+        self.client_durs = np.asarray(
+            carbon_mod.client_durations_s(ctx.fleet, ctx.round_flops, ctx.model_bytes)
+        )
+        self.global_version = 0  # bumped per edge->global server update
+        dp = ctx.privacy.dp
+        per_region = dp is not None and ctx.privacy.accounting == "per_region"
+        self.accountants = {}
+        self.regions: list[hierarchy.Region] = []
+        root = jax.random.PRNGKey(train.seed)
+        for ridx, ids in enumerate(hierarchy.assign_regions(ctx.fleet, topo.n_regions)):
+            # a single region keeps the root key so its PRNG stream (and
+            # therefore selection/masking/noise) is bitwise the sync strategy's
+            key = root if topo.n_regions == 1 else jax.random.fold_in(root, ridx)
+            self.regions.append(hierarchy.Region(
+                idx=ridx,
+                clients=ids,
+                fleet=hierarchy.subfleet(ctx.fleet, ids),
+                policy=ctx.policy,
+                orch_state=orch.init_state(
+                    len(ids), stale_in_state=ctx.cfg.orchestrator.stale_in_state
+                ),
+                key=key,
+                edge_params=ctx.server_state.params,
+                edge_accum=ctx.pspace.zeros_row(),
+            ))
+            if per_region:
+                self.accountants[ridx] = SubsampledAccountant(dp.delta)
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, ctx: RuntimeContext, reg: hierarchy.Region, now: float, heap: list) -> None:
+        """Select a wave in ``reg``, train it against the current edge model,
+        and enqueue per-client completion events."""
+        train = ctx.train
+        k = min(train.clients_per_round, reg.n)
+        reg.key, k_sel, k_int, k_agg, k_noise = jax.random.split(reg.key, 5)
+        t_hours = reg.waves * ctx.carbon.round_hours
+        inten = carbon_mod.intensity(reg.fleet, t_hours, k_int)
+        mask, reg.orch_state = reg.policy(k_sel, reg.orch_state, reg.fleet, inten, k)
+        sel_local = np.flatnonzero(np.asarray(mask))[:k]
+        sel_global = reg.global_ids(sel_local)
+
+        res = ctx.train_cohort(reg.edge_params, sel_global, reg.waves)
+
+        durs = self.client_durs[np.asarray(sel_global)]
+        mean_d = float(np.mean(durs))
+        # latency_spread interpolates between "wave lands together" (0, the
+        # sync-equivalence anchor) and the full heterogeneous fleet model (1)
+        spread = ctx.topology.latency_spread
+        comp = now + carbon_mod.ROUND_OVERHEAD_S + mean_d + spread * (durs - mean_d)
+        for j, (ci, li) in enumerate(zip(sel_global, sel_local)):
+            entry = hierarchy.BufferEntry(
+                client=int(ci), local=int(li), version=reg.version, wave=reg.waves,
+                weight=float(len(ctx.clients[ci])),
+                row=res.rows[j],  # device-resident (P,) slice — no host pytree
+                loss=float(res.loss_last[j]), t_hours=t_hours, k_agg=k_agg,
+                inten=inten,
+            )
+            heapq.heappush(heap, (float(comp[j]), next(self._seq), reg.idx, entry))
+        reg.waves += 1
+        reg.inflight += len(sel_global)
+
+    def _maybe_dispatch(self, ctx: RuntimeContext, reg: hierarchy.Region, now: float, heap: list) -> None:
+        k = min(ctx.train.clients_per_round, reg.n)
+        while reg.inflight + k <= max(self.concurrency, k):
+            self._dispatch(ctx, reg, now, heap)
+
+    # ------------------------------------------------------------------
+    def _edge_sync(self, ctx: RuntimeContext, reg: hierarchy.Region) -> None:
+        """Push the region's accumulated delta row to the global server.
+
+        The accumulator is tracked additively (never re-derived as
+        edge_params - global_params) and the pytree form of the delta is
+        produced exactly once, at the server-update boundary, so with one
+        region and edge_sync_every=1 the global update is bitwise the sync
+        strategy's.  The sync is weighted by the *global-tier* staleness
+        ``1/sqrt(1 + tau_g)`` where ``tau_g`` counts global model versions
+        applied since this edge last synced — a region that lagged while
+        others advanced the global model pushes a discounted delta instead
+        of an unweighted one.  tau_g == 0 (single region, or no interleaved
+        syncs) keeps the weight exactly 1.
+        """
+        if reg.pending == 0:
+            return
+        tau_g = self.global_version - reg.synced_version
+        w_g = float(hierarchy.staleness_weight(tau_g, ctx.topology.staleness_cap))
+        scale = w_g * reg.n / ctx.train.n_clients
+        row = reg.edge_accum if scale == 1.0 else reg.edge_accum * scale
+        ctx.server_state = ctx.server_apply(ctx.server_state, ctx.pspace.unravel(row))
+        self.global_version += 1
+        reg.synced_version = self.global_version
+        reg.edge_params = ctx.server_state.params
+        reg.edge_accum = ctx.pspace.zeros_row()
+        reg.pending = 0
+
+    def _emissions_for(self, ctx: RuntimeContext, entries) -> tuple[float, np.ndarray]:
+        """gCO2 of the training behind ``entries``, grouped by dispatch phase.
+
+        Returns (total_g, union participation mask over the global fleet).
+        """
+        co2 = 0.0
+        union = np.zeros(ctx.train.n_clients, bool)
+        for t in dict.fromkeys(e.t_hours for e in entries):  # stable unique
+            ids = np.asarray([e.client for e in entries if e.t_hours == t])
+            m = jnp.zeros(ctx.train.n_clients, bool).at[jnp.asarray(ids)].set(True)
+            g, _ = carbon_mod.round_emissions_g(ctx.fleet, m, t, ctx.round_flops, None)
+            co2 += float(g)
+            union[ids] = True
+        return co2, union
+
+    def _flush(self, ctx: RuntimeContext, reg: hierarchy.Region, trigger: hierarchy.BufferEntry):
+        """Apply one staleness-weighted buffer flush at ``reg``'s edge.
+
+        Returns the per-flush record (co2, duration, staleness, ...) for the
+        event stream; the aggregation runs the shared privacy pipeline with
+        staleness-adjusted weights, so plain / secure-agg / DP paths behave
+        exactly as in the sync strategy.
+        """
+        topo = ctx.topology
+        entries = reg.buffer[: self.buffer_k]
+        reg.buffer = reg.buffer[self.buffer_k:]
+        taus = np.asarray([reg.version - e.version for e in entries])
+        s = hierarchy.staleness_weight(taus, topo.staleness_cap)
+        eff_w = [e.weight * float(si) for e, si in zip(entries, s)]
+        rows = jnp.stack([e.row for e in entries])  # (k, P) — stays on device
+        # one wave can trigger several flushes (buffer_k < wave size): the
+        # first reuses the wave's k_agg verbatim (sync-equivalence anchor),
+        # later ones fold the count in so no mask/noise stream ever repeats
+        n_prior = reg.wave_flushes.get(trigger.wave, 0)
+        reg.wave_flushes[trigger.wave] = n_prior + 1
+        k_flush = trigger.k_agg if n_prior == 0 else jax.random.fold_in(trigger.k_agg, n_prior)
+        mean_row, records = ctx.aggregate(rows, eff_w, k_flush)
+        reg.edge_params = ctx.pspace.add_to_tree(reg.edge_params, mean_row)
+        reg.edge_accum = reg.edge_accum + mean_row
+        reg.version += 1
+        reg.flushes += 1
+        reg.pending += 1
+        if reg.flushes % topo.edge_sync_every == 0:
+            self._edge_sync(ctx, reg)
+
+        # per-region subsampled accounting: the NoiseStage record carries the
+        # sigma that actually ran; the sampling rate counts *distinct* clients
+        # over the region.  A client with m entries in one flush (possible
+        # when concurrency > clients_per_round) has sensitivity m·clip, so
+        # the step is composed at the effective multiplier sigma/m —
+        # conservative: epsilon can only be overestimated, never under.
+        if reg.idx in self.accountants:
+            noise = [r for r in records if r.stage == "noise"]
+            if noise:
+                counts: dict[int, int] = {}
+                for e in entries:
+                    counts[e.client] = counts.get(e.client, 0) + 1
+                mult = max(counts.values())
+                self.accountants[reg.idx].record(
+                    q=min(1.0, len(counts) / reg.n),
+                    sigma=noise[-1].info["sigma"] / mult,
+                )
+
+        # ---- carbon + modeled-time accounting (per dispatch-phase group) --
+        co2, union = self._emissions_for(ctx, entries)
+        dur = float(carbon_mod.round_duration_s(
+            ctx.fleet, jnp.asarray(union), ctx.round_flops, ctx.model_bytes
+        ))
+        reg.co2_g += co2
+        flush_mask = np.zeros(reg.n, bool)
+        flush_mask[[e.local for e in entries]] = True
+        return entries, taus, co2, dur, flush_mask
+
+    def _spent_epsilon(self, ctx: RuntimeContext, flushes: int) -> float:
+        dp = ctx.privacy.dp
+        if dp is None:
+            return 0.0
+        if self.accountants:
+            return max(a.epsilon() for a in self.accountants.values())
+        return dp_mod.spent_epsilon(dp, flushes)
+
+    # ------------------------------------------------------------------
+    def run(self, ctx: RuntimeContext, emit: Callable) -> dict:
+        train = ctx.train
+        co2_l: list[float] = []
+        dur_l: list[float] = []
+        stale_l: list[float] = []
+        cum_co2 = 0.0
+        acc = ctx.evaluate(ctx.server_state.params)
+        last_acc = acc
+        heap: list = []
+        self._seq = itertools.count()
+        now = 0.0
+        for reg in self.regions:
+            self._maybe_dispatch(ctx, reg, now, heap)
+
+        flushes = 0
+        while flushes < train.rounds and heap:
+            now, _, ridx, entry = heapq.heappop(heap)
+            reg = self.regions[ridx]
+            reg.inflight -= 1
+            reg.buffer.append(entry)
+            while len(reg.buffer) >= self.buffer_k and flushes < train.rounds:
+                entries, taus, co2, dur, flush_mask = self._flush(ctx, reg, entry)
+                # straggler EMA: observed staleness per flushed client feeds
+                # the MARL state so selection can demote chronic stragglers
+                # (zero in the sync-equivalence regime -> no behavior change).
+                # maximum.at: a client with two entries in one flush records
+                # its worst staleness, not whichever entry came last.
+                tau_vec = np.zeros(reg.n, np.float32)
+                np.maximum.at(tau_vec, [e.local for e in entries], taus)
+                reg.orch_state = orch.observe_staleness(reg.orch_state, flush_mask, tau_vec)
+                cum_co2 += co2
+                flushes += 1
+                if flushes % train.eval_every == 0 or flushes == train.rounds:
+                    acc = ctx.evaluate(ctx.server_state.params)
+                eff = -dur / 100.0
+                if ctx.uses_rl:
+                    reg.orch_state, r = orch.update(
+                        reg.orch_state, flush_mask, jnp.float32(acc),
+                        jnp.float32(eff), jnp.float32(co2), jnp.mean(entry.inten),
+                    )
+                    r = float(r)
+                else:
+                    r = 0.0
+                stale = float(np.mean(taus))
+                co2_l.append(co2)
+                dur_l.append(dur)
+                stale_l.append(stale)
+                last_acc = acc
+                emit(FlushEvent(
+                    round=flushes - 1, acc=acc,
+                    loss=float(np.mean([e.loss for e in entries])),
+                    co2_g=co2, cum_co2_g=cum_co2, duration_s=dur, reward=r,
+                    eps_spent=self._spent_epsilon(ctx, flushes),
+                    selected=tuple(e.client for e in entries),
+                    staleness=stale, region=reg.idx, sim_time_s=now,
+                ))
+            if flushes < train.rounds:
+                self._maybe_dispatch(ctx, reg, now, heap)
+
+        # drain: push any un-synced edge progress to the global model, and
+        # charge emissions for training that was dispatched but never
+        # flushed (in-flight at the rounds cap or left in a partial buffer)
+        # — the energy was spent whether or not a flush consumed the delta
+        unflushed = 0.0
+        leftovers: dict[int, list] = {reg.idx: list(reg.buffer) for reg in self.regions}
+        for _, _, ridx, entry in heap:
+            leftovers[ridx].append(entry)
+        for reg in self.regions:
+            g, _ = self._emissions_for(ctx, leftovers[reg.idx])
+            reg.co2_g += g
+            unflushed += g
+        cum_co2 += unflushed
+        pending = any(reg.pending for reg in self.regions)
+        for reg in self.regions:
+            self._edge_sync(ctx, reg)
+        if pending:
+            last_acc = ctx.evaluate(ctx.server_state.params)
+        summary = {
+            "final_acc": last_acc,
+            "mean_co2_g": float(np.mean(co2_l)) if co2_l else 0.0,
+            "mean_duration_s": float(np.mean(dur_l)) if dur_l else 0.0,
+            "cum_co2_total_g": cum_co2,
+            "unflushed_co2_g": unflushed,
+            "mean_staleness": float(np.mean(stale_l)) if stale_l else 0.0,
+            "buffer_flushes": {reg.idx: reg.flushes for reg in self.regions},
+            "co2_by_region_g": {reg.idx: reg.co2_g for reg in self.regions},
+        }
+        if self.accountants:
+            summary["eps_by_region"] = {
+                ridx: a.epsilon() for ridx, a in self.accountants.items()
+            }
+        return summary

@@ -1,0 +1,141 @@
+"""Structured experiment configuration for the public ``repro.api``.
+
+The legacy engine exposed one flat 20-field ``FLConfig`` (plus an
+``AsyncFLConfig`` subclass) — every scenario axis lived in the same
+namespace, and composing a new experiment meant editing engine internals.
+Here each subsystem owns its own config block:
+
+    TrainingConfig      local/server optimization protocol (§IV)
+    PrivacyConfig       clip→quantize→mask→noise pipeline + accounting
+    TopologyConfig      sync round loop vs async edge→global hierarchy
+    CarbonConfig        fleet heterogeneity + carbon-phase clock (§III-D)
+    OrchestratorConfig  selection policy + MARL state encoding (§III-B)
+
+``ExperimentConfig`` composes the five blocks and round-trips through plain
+dicts (``to_dict``/``from_dict``) so experiment grids can live in JSON.  The
+deprecated ``FLConfig`` shim (``repro.fl.simulation``) maps its flat fields
+onto these blocks 1:1 — see the README migration table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.privacy.dp import DPConfig
+
+
+@dataclasses.dataclass
+class TrainingConfig:
+    """Local + server optimization protocol (paper §IV defaults)."""
+
+    algorithm: str = "fedavg"     # fedavg | fedprox | fedadam | fedyogi | scaffold | fednova
+    n_clients: int = 50
+    clients_per_round: int = 10
+    rounds: int = 100             # sync rounds, or global buffer flushes (async)
+    local_steps: int = 25         # fixed local batches/round (paper: 5 epochs)
+    batch_size: int = 32
+    client_lr: float = 0.05
+    client_momentum: float = 0.9
+    server_lr: float = 1.0
+    prox_mu: float = 0.01         # mu_base of Eq. 7
+    sharded: bool = False         # shard cohort training over the mesh data axis
+    seed: int = 0
+    eval_every: int = 5
+    max_eval_batches: int = 20
+
+
+@dataclasses.dataclass
+class PrivacyConfig:
+    """Privacy-pipeline composition knobs (paper §III-C).
+
+    ``build_pipeline`` turns this block into a ``PrivacyPipeline`` of
+    row-native stages; pass a hand-composed pipeline to ``Federation``
+    directly for anything the flags can't express.
+    """
+
+    secure_agg: bool = False      # masked-ring aggregation (uint32 one-time pads)
+    sa_bits: int = 20
+    sa_clip: float = 10.0         # ring clip for quantization (non-DP runs)
+    dp: Optional[DPConfig] = None
+    accounting: str = "global"    # global | per_region (subsampled-RDP per edge region)
+
+    def __post_init__(self):
+        # the strategies only ever *compare* against "per_region", so a typo
+        # here would otherwise silently fall back to the global schedule
+        if self.accounting not in ("global", "per_region"):
+            raise ValueError(
+                f"unknown accounting {self.accounting!r}; use 'global' or 'per_region'"
+            )
+
+
+@dataclasses.dataclass
+class TopologyConfig:
+    """Aggregation topology: flat synchronous rounds or the buffered
+    asynchronous edge→global hierarchy.  The async knobs are ignored by the
+    sync strategy."""
+
+    mode: str = "sync"            # sync | async_hier (Strategy registry key)
+    buffer_k: int = 0             # flush when K deltas buffered (0 -> clients_per_round)
+    staleness_cap: int = 10       # clamp tau inside the 1/sqrt(1+tau) weight
+    latency_spread: float = 1.0   # 0 = wave completes together (sync equivalence)
+    concurrency: int = 0          # in-flight clients per region (0 -> clients_per_round)
+    n_regions: int = 1            # edge aggregators (phase-coherent client clusters)
+    edge_sync_every: int = 1      # edge->global sync period, in edge flushes
+
+
+@dataclasses.dataclass
+class CarbonConfig:
+    """Provider-fleet heterogeneity and the simulated carbon-phase clock."""
+
+    round_hours: float = 0.5      # simulated wall-clock per round (carbon phase)
+    hetero: float = 0.35
+
+
+@dataclasses.dataclass
+class OrchestratorConfig:
+    """Client-selection policy + MARL state encoding (§III-B)."""
+
+    selection: str = "random"     # random | green | rl | rl_green (selector registry key)
+    # Fold the observed straggler EMA into the discretized MARL state as a
+    # fourth s_t factor (Eq. 2 extended).  Default False keeps the
+    # score-penalty form (orchestrator.LAMBDA_STALE demotion) for comparison.
+    stale_in_state: bool = False
+
+
+@dataclasses.dataclass
+class ExperimentConfig:
+    """One experiment = the composition of the five subsystem blocks."""
+
+    training: TrainingConfig = dataclasses.field(default_factory=TrainingConfig)
+    privacy: PrivacyConfig = dataclasses.field(default_factory=PrivacyConfig)
+    topology: TopologyConfig = dataclasses.field(default_factory=TopologyConfig)
+    carbon: CarbonConfig = dataclasses.field(default_factory=CarbonConfig)
+    orchestrator: OrchestratorConfig = dataclasses.field(default_factory=OrchestratorConfig)
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        """Plain-dict (JSON-safe) form; inverse of :meth:`from_dict`."""
+        d = {
+            "training": dataclasses.asdict(self.training),
+            "privacy": dataclasses.asdict(self.privacy),
+            "topology": dataclasses.asdict(self.topology),
+            "carbon": dataclasses.asdict(self.carbon),
+            "orchestrator": dataclasses.asdict(self.orchestrator),
+        }
+        dp = self.privacy.dp
+        d["privacy"]["dp"] = dict(dp._asdict()) if dp is not None else None
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "ExperimentConfig":
+        privacy = dict(d.get("privacy", {}))
+        dp = privacy.get("dp")
+        if dp is not None and not isinstance(dp, DPConfig):
+            privacy["dp"] = DPConfig(**dp)
+        return cls(
+            training=TrainingConfig(**d.get("training", {})),
+            privacy=PrivacyConfig(**privacy),
+            topology=TopologyConfig(**d.get("topology", {})),
+            carbon=CarbonConfig(**d.get("carbon", {})),
+            orchestrator=OrchestratorConfig(**d.get("orchestrator", {})),
+        )

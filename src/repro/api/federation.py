@@ -1,0 +1,174 @@
+"""``Federation`` — the composable public entry point for experiments.
+
+One federated experiment is the composition of five swappable pieces::
+
+    Federation(cfg, task,
+               strategy=...,   # how updates reach the server (sync | async_hier)
+               selector=...,   # who trains each round (random | green | rl | rl_green)
+               privacy=...,    # what the server is allowed to see (PrivacyPipeline)
+               telemetry=[...])  # who observes the run (RoundEvent/FlushEvent sinks)
+
+``Federation.run()`` returns the same history-dict schema the legacy engines
+did (the schema is rebuilt from the typed event stream by a
+:class:`~repro.api.telemetry.HistoryRecorder`), so downstream tooling —
+benchmarks, figures, claim checks — is unchanged.
+
+A *strategy* owns the control flow between cohort training and server
+updates and implements the :class:`Strategy` protocol; the two built-ins are
+registered in :data:`STRATEGIES`:
+
+    sync        lock-step rounds (``repro.api.sync.SyncStrategy``)
+    async_hier  event-driven buffered aggregation under an edge→global
+                hierarchy (``repro.api.async_hier.AsyncHierStrategy``)
+
+Strategies *compose* a shared :class:`~repro.api.runtime.RuntimeContext`
+(dataflow, fleet, privacy pipeline, server optimizer) instead of inheriting
+from one engine class — a new topology is one class plus one
+:func:`register_strategy` call, no engine edits.
+
+``build(cfg, task)`` is the registry constructor: it accepts an
+``ExperimentConfig`` or its plain-dict form (experiment grids in JSON) and
+resolves every component from the config's registry keys.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional, Protocol, Union, runtime_checkable
+
+from repro.api.config import ExperimentConfig
+from repro.api.pipeline import PrivacyPipeline
+from repro.api.runtime import FederatedTask, RuntimeContext
+from repro.api.telemetry import (CallbackSink, HistoryRecorder, RoundEvent,
+                                 TelemetrySink)
+
+
+@runtime_checkable
+class Strategy(Protocol):
+    """The control-flow plug of a federation.
+
+    ``validate`` may reject a config up front (construction-time errors);
+    ``setup`` builds any per-run state from the shared context; ``run``
+    drives rounds/flushes, emitting one event per server-visible update via
+    ``emit`` and returning the summary columns of the history dict.
+    ``history_keys`` fixes the per-event history schema.
+    """
+
+    name: str
+    history_keys: tuple[str, ...]
+
+    def validate(self, cfg: ExperimentConfig) -> None: ...
+    def setup(self, ctx: RuntimeContext) -> None: ...
+    def run(self, ctx: RuntimeContext, emit: Callable[[RoundEvent], None]) -> dict: ...
+
+
+#: registry mapping ``TopologyConfig.mode`` names to strategy factories; the
+#: built-ins land on first use (lazily — sync/async_hier import the runtime
+#: stack, and package-init-time imports would cycle)
+STRATEGIES: dict[str, Callable[[], Strategy]] = {}
+_builtins_loaded = False
+
+
+def _ensure_registry() -> dict[str, Callable[[], Strategy]]:
+    global _builtins_loaded
+    if not _builtins_loaded:
+        from repro.api.async_hier import AsyncHierStrategy
+        from repro.api.sync import SyncStrategy
+
+        STRATEGIES.setdefault("sync", SyncStrategy)
+        STRATEGIES.setdefault("async_hier", AsyncHierStrategy)
+        _builtins_loaded = True
+    return STRATEGIES
+
+
+def register_strategy(name: str, factory: Callable[[], Strategy]) -> None:
+    """Make ``TopologyConfig(mode=name)`` construct ``factory()`` — the one
+    registration point a new aggregation topology needs."""
+    _ensure_registry()[name] = factory
+
+
+def strategy_names() -> tuple[str, ...]:
+    return tuple(_ensure_registry())
+
+
+class Federation:
+    """One experiment, built once, run once.
+
+    Every component defaults to what ``cfg`` names (strategy from
+    ``cfg.topology.mode``, selector from ``cfg.orchestrator.selection``,
+    pipeline from ``cfg.privacy``); pass instances to override — a custom
+    ``Strategy`` object, a selector callable, a hand-composed
+    :class:`PrivacyPipeline`, extra telemetry sinks.  Validation and all
+    subsystem wiring happen at construction, so bad configs fail fast.
+    """
+
+    def __init__(
+        self,
+        cfg: ExperimentConfig,
+        task: FederatedTask,
+        *,
+        strategy: Union[None, str, Strategy] = None,
+        selector: Union[None, str, Callable] = None,
+        privacy: Optional[PrivacyPipeline] = None,
+        telemetry: Iterable[TelemetrySink] = (),
+    ):
+        self.cfg = cfg
+        self.task = task
+        if strategy is None:
+            strategy = cfg.topology.mode
+        if isinstance(strategy, str):
+            registry = _ensure_registry()
+            if strategy not in registry:
+                raise ValueError(
+                    f"unknown strategy {strategy!r}; registered: {sorted(registry)}"
+                )
+            strategy = registry[strategy]()
+        self.strategy: Strategy = strategy
+        self.strategy.validate(cfg)
+        self.ctx = RuntimeContext(cfg, task, pipeline=privacy, selector=selector)
+        self.strategy.setup(self.ctx)
+        self.telemetry: list[TelemetrySink] = list(telemetry)
+        self._ran = False
+
+    # ------------------------------------------------------------------
+    def run(self, progress: Optional[Callable[[dict], None]] = None) -> dict:
+        """Drive the strategy to completion; returns the history dict.
+
+        ``progress`` is the legacy per-round callback — it is adapted onto
+        the event stream via :class:`CallbackSink`.  A ``Federation`` is
+        single-shot (its runtime state is consumed by the run), matching the
+        legacy engines.
+        """
+        if self._ran:
+            raise RuntimeError("Federation.run() is single-shot; build a new one")
+        self._ran = True
+        recorder = HistoryRecorder(self.strategy.history_keys)
+        sinks: list[TelemetrySink] = [recorder, *self.telemetry]
+        if progress is not None:
+            sinks.append(CallbackSink(progress))
+
+        def emit(event: RoundEvent) -> None:
+            for sink in sinks:
+                sink.emit(event)
+
+        summary = self.strategy.run(self.ctx, emit)
+        history = recorder.history
+        history.update(summary)
+        return history
+
+
+def build(
+    cfg: Union[ExperimentConfig, dict],
+    task: FederatedTask,
+    *,
+    telemetry: Iterable[TelemetrySink] = (),
+) -> Federation:
+    """Registry construction: config (or its plain-dict form) -> Federation.
+
+    Everything is resolved from the config's registry keys — this is the
+    one-call path for JSON experiment grids::
+
+        fed = api.build(json.load(f), task)
+        history = fed.run()
+    """
+    if isinstance(cfg, dict):
+        cfg = ExperimentConfig.from_dict(cfg)
+    return Federation(cfg, task, telemetry=telemetry)

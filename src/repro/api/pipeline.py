@@ -1,0 +1,266 @@
+"""Composable row-native privacy pipeline (paper §III-C).
+
+The legacy engines hard-coded one aggregation chain in
+``Simulation._aggregate`` (clip → quantize → mask → kernel-sum → noise) with
+the composition decided by two config flags.  Here the chain is a
+:class:`PrivacyPipeline` of explicit stages over ``ParamSpace`` rows:
+
+    ClipStage      per-client L2 clip (DP sensitivity bound)       [rows]
+    ScaleStage     pre-scale rows by k·(n_i/Σn) (weighted masking) [rows]
+    QuantizeStage  fixed-point encode into the uint32 ring         [rows]
+    MaskStage      per-client one-time pads (dealer model)         [rows]
+    NoiseStage     server-side Gaussian mechanism on the sum       [sum]
+
+The executor applies row-scope stages in order, reduces (the fused
+``masked_agg`` Pallas kernel when the rows were masked, a plain ring sum
+when only quantized, the weighted-sum kernel otherwise), applies sum-scope
+stages, and rescales to the mean.  Every stage appends a
+:class:`StageRecord` to the call's :class:`AggregationContext`, so the
+accountant (``privacy.accountant.SubsampledAccountant``) and the engines see
+exactly what ran — the per-region DP accounting is driven entirely by the
+``NoiseStage`` records.
+
+``build_pipeline`` maps a :class:`~repro.api.config.PrivacyConfig` onto the
+three canonical compositions (plain / secure-agg / DP), reproducing the
+legacy chains bit-for-bit; hand-compose stages for anything else, e.g.
+central DP without masking::
+
+    PrivacyPipeline((ClipStage(1.0), NoiseStage(dp_cfg)), weighting="uniform")
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.paramspace import ParamSpace
+from repro.kernels import ops as kernel_ops
+from repro.privacy import dp as dp_mod
+from repro.privacy import quantize, secure_agg
+from repro.privacy.dp import DPConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class StageRecord:
+    """What one stage did in one aggregate call (static metadata only)."""
+
+    stage: str
+    info: dict
+
+
+class AggregationContext:
+    """Per-call scratch shared along the pipeline.
+
+    Carries the experiment's ``ParamSpace``, the cohort size/weights, the
+    independent PRNG streams for masks and noise, and the engine's
+    kernel-aware weighted-sum reduction.  Stages communicate through it:
+    ``QuantizeStage`` sets ``ring``, ``MaskStage`` deposits the pad block
+    the reducer needs for unmasking, and every stage appends its record.
+    """
+
+    def __init__(
+        self,
+        pspace: ParamSpace,
+        k: int,
+        weights,
+        key_mask,
+        key_noise,
+        weighted_sum: Callable,
+    ):
+        self.pspace = pspace
+        self.k = int(k)
+        self.weights = np.asarray(weights, np.float64)
+        self.key_mask = key_mask
+        self.key_noise = key_noise
+        self.weighted_sum = weighted_sum
+        self.ring: Optional[tuple[float, int]] = None  # (clip, bits) once quantized
+        self.masks: Optional[jax.Array] = None
+        self.records: list[StageRecord] = []
+
+    @property
+    def norm_weights(self) -> jax.Array:
+        """(k,) float32 data-size weights normalized to sum 1 (Eq. 6)."""
+        return jnp.asarray(self.weights / np.sum(self.weights), jnp.float32)
+
+    def record(self, stage: str, **info) -> None:
+        self.records.append(StageRecord(stage, info))
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClipStage:
+    """Per-client L2 clip of the delta rows — the DP sensitivity bound."""
+
+    clip: float
+    name = "clip"
+    scope = "rows"
+
+    def apply(self, rows: jax.Array, ctx: AggregationContext) -> jax.Array:
+        clipped, _ = dp_mod.clip_rows(rows, self.clip)
+        ctx.record(self.name, clip=self.clip)
+        return clipped
+
+
+@dataclasses.dataclass(frozen=True)
+class ScaleStage:
+    """Pre-scale rows by k·(n_i/Σn): data-size weighting pushed client-side
+    so the masked ring sum / k is the weighted mean (secure-agg path)."""
+
+    name = "scale"
+    scope = "rows"
+
+    def apply(self, rows: jax.Array, ctx: AggregationContext) -> jax.Array:
+        w = ctx.norm_weights
+        ctx.record(self.name, mode="data_size")
+        return rows * (w * ctx.k)[:, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizeStage:
+    """Fixed-point encode into the uint32 ring (pads rows to whole kernel
+    blocks first, exactly as the fused kernels expect)."""
+
+    clip: float
+    bits: int
+    name = "quantize"
+    scope = "rows"
+
+    def apply(self, rows: jax.Array, ctx: AggregationContext) -> jax.Array:
+        quantize.check_headroom(self.bits, ctx.k)
+        rows = ctx.pspace.pad_rows(rows)
+        ctx.ring = (self.clip, self.bits)
+        ctx.record(self.name, clip=self.clip, bits=self.bits)
+        return quantize.encode(rows, self.clip, self.bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskStage:
+    """Add per-client one-time pads (dealer model); the reducer unmasks via
+    the fused ``masked_agg`` kernel, which only ever sees ciphertexts."""
+
+    name = "mask"
+    scope = "rows"
+
+    def apply(self, rows: jax.Array, ctx: AggregationContext) -> jax.Array:
+        if ctx.ring is None:
+            raise ValueError("MaskStage requires a QuantizeStage before it "
+                             "(one-time pads live in the uint32 ring)")
+        ctx.masks = secure_agg.mask_rows(ctx.key_mask, ctx.k, rows.shape[1])
+        ctx.record(self.name, ring_bits=quantize.RING_BITS)
+        return rows + ctx.masks  # uint32 wraps = mod 2^32
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseStage:
+    """Server-side Gaussian mechanism on the summed clipped rows.
+
+    Its record carries (sigma, clip, delta) — the exact metadata the
+    subsampled-RDP accountant composes per region.
+    """
+
+    dp: DPConfig
+    name = "noise"
+    scope = "sum"
+
+    def apply(self, summed: jax.Array, ctx: AggregationContext) -> jax.Array:
+        ctx.record(self.name, sigma=self.dp.sigma, clip=self.dp.clip,
+                   delta=self.dp.delta, mechanism="gaussian")
+        return dp_mod.add_noise(ctx.key_noise, summed, self.dp)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivacyPipeline:
+    """An ordered stage composition plus the aggregation weighting.
+
+    ``weighting``: how un-quantized rows are reduced —
+      * ``"data"``     Σ (n_i/Σn)·row_i (the plain Eq. 6 weighted mean);
+      * ``"uniform"``  Σ row_i, then /k after the sum-scope stages (the DP
+        mean: the clip bounds per-client sensitivity of the *sum*).
+    Ring reductions (after ``QuantizeStage``) always sum and divide by k;
+    data-size weighting there is ``ScaleStage``'s job.
+    """
+
+    stages: tuple = ()
+    weighting: str = "data"  # data | uniform
+
+    def __post_init__(self):
+        if self.weighting not in ("data", "uniform"):
+            raise ValueError(f"unknown weighting {self.weighting!r}")
+        # declared order IS execution order: row-scope stages run before the
+        # reduction, sum-scope after, so a sum stage ahead of a row stage
+        # would execute in a different order than describe() reports
+        scopes = [s.scope for s in self.stages]
+        if "sum" in scopes and "rows" in scopes[scopes.index("sum"):]:
+            raise ValueError(
+                "row-scope stages must precede sum-scope stages "
+                f"(got {[s.name for s in self.stages]})"
+            )
+
+    def describe(self) -> list[str]:
+        return [s.name for s in self.stages]
+
+    def aggregate(self, rows: jax.Array, ctx: AggregationContext) -> jax.Array:
+        """(k, P) delta rows -> (P,) MEAN row, recording every stage."""
+        row_stages = [s for s in self.stages if s.scope == "rows"]
+        sum_stages = [s for s in self.stages if s.scope == "sum"]
+        for stage in row_stages:
+            rows = stage.apply(rows, ctx)
+
+        if ctx.ring is not None:
+            clip, bits = ctx.ring
+            if ctx.masks is not None:
+                # fused unmask + dequantize + sum in one VMEM pass
+                dec = kernel_ops.masked_aggregate(rows, ctx.masks, clip, bits)
+            else:  # quantized but unmasked: plain ring sum + decode
+                dec = quantize.decode_sum(
+                    jnp.sum(rows, axis=0, dtype=jnp.uint32), clip, bits, ctx.k
+                )
+            summed = dec[: ctx.pspace.dim]
+            mean_scale = 1.0 / ctx.k
+        elif self.weighting == "uniform":
+            summed = ctx.weighted_sum(rows, jnp.ones((ctx.k,), jnp.float32))
+            mean_scale = 1.0 / ctx.k
+        else:
+            summed = ctx.weighted_sum(rows, ctx.norm_weights)
+            mean_scale = 1.0
+
+        for stage in sum_stages:
+            summed = stage.apply(summed, ctx)
+        return summed if mean_scale == 1.0 else summed * mean_scale
+
+
+def build_pipeline(privacy) -> PrivacyPipeline:
+    """Map a ``PrivacyConfig`` onto the canonical stage compositions.
+
+    Reproduces the legacy ``Simulation._aggregate`` chains exactly:
+
+        dp set       : clip → quantize → mask → [kernel sum] → noise, /k
+        secure_agg   : scale → quantize → mask → [kernel sum], /k
+        neither      : [weighted-sum kernel]  (plain Eq. 6)
+    """
+    if privacy.dp is not None:
+        dp = privacy.dp
+        return PrivacyPipeline(
+            stages=(ClipStage(dp.clip), QuantizeStage(dp.clip, dp.bits),
+                    MaskStage(), NoiseStage(dp)),
+            weighting="uniform",
+        )
+    if privacy.secure_agg:
+        return PrivacyPipeline(
+            stages=(ScaleStage(), QuantizeStage(privacy.sa_clip, privacy.sa_bits),
+                    MaskStage()),
+            weighting="uniform",
+        )
+    return PrivacyPipeline()

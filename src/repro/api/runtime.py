@@ -1,0 +1,220 @@
+"""Shared experiment runtime for every aggregation strategy.
+
+``RuntimeContext`` wires the subsystem stack once — data-size weights, the
+flat-row ``ParamSpace``, the (optionally sharded) cohort trainer, the server
+optimizer, the provider fleet + carbon model, the selection policy/MARL
+state, and the privacy pipeline — and both strategies (the synchronous round
+loop and the event-driven async hierarchy) drive it.  This replaces the old
+arrangement where the async engine *inherited* the sync ``Simulation`` to
+reach its setup code: strategies now compose a context instead of
+subclassing an engine.
+
+Dataflow is flat-row end to end (``repro.fl.paramspace``): the cohort
+trainer returns (k, P) float32 delta rows, the privacy pipeline
+clips/quantizes/masks rows, the Pallas kernels reduce rows, and the pytree
+form of an update is materialized exactly once — at the server-optimizer
+boundary.
+
+Energy/emissions: per-round client FLOPs are measured from the *compiled*
+local step (``cost_analysis``), fed through the §III-D device/carbon model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import ExperimentConfig
+from repro.api.pipeline import (AggregationContext, PrivacyPipeline, StageRecord,
+                                build_pipeline)
+from repro.core import carbon as carbon_mod
+from repro.core import orchestrator as orch
+from repro.core.selection import POLICIES, policy_uses_rl
+from repro.data.pipeline import ClientDataset, eval_batches
+from repro.fl import client as client_mod
+from repro.fl import server as server_mod
+from repro.fl.paramspace import ParamSpace
+from repro.kernels import ops as kernel_ops
+from repro.optim import optimizers as opt_mod
+from repro.utils import PyTree, tree_zeros_like
+
+
+@dataclasses.dataclass
+class FederatedTask:
+    """The learning problem a federation runs: model, loss, and data."""
+
+    loss_fn: Callable              # (params, batch) -> (scalar, metrics)
+    eval_fn: Callable              # (params, batch) -> metrics dict with "acc"
+    params0: PyTree
+    clients: list[ClientDataset]
+    test_data: dict[str, np.ndarray]
+
+
+class RuntimeContext:
+    """Everything a strategy needs to run rounds, built once per experiment."""
+
+    def __init__(
+        self,
+        cfg: ExperimentConfig,
+        task: FederatedTask,
+        *,
+        pipeline: Optional[PrivacyPipeline] = None,
+        selector: Union[None, str, Callable] = None,
+    ):
+        train, priv = cfg.training, cfg.privacy
+        assert len(task.clients) == train.n_clients
+        self.cfg = cfg
+        self.train = train
+        self.privacy = priv
+        self.topology = cfg.topology
+        self.carbon = cfg.carbon
+        self.clients = task.clients
+        self.test_data = task.test_data
+        self.eval_fn = jax.jit(task.eval_fn)
+        self.pipeline = pipeline if pipeline is not None else build_pipeline(priv)
+
+        # SCAFFOLD's control-variate correction assumes plain SGD clients
+        # (Karimireddy et al. Alg. 1); momentum double-applies the correction.
+        if train.algorithm == "scaffold":
+            local_opt = opt_mod.sgd(train.client_lr)
+        else:
+            local_opt = opt_mod.momentum(train.client_lr, beta=train.client_momentum)
+        # the canonical pytree<->rows mapping every downstream layer shares
+        self.pspace = ParamSpace.build(task.params0)
+        self.trainer = client_mod.make_local_trainer(task.loss_fn, local_opt)
+        if train.sharded:
+            from repro.launch import cohort as cohort_mod  # lazy: touches devices
+
+            self.cohort_trainer = cohort_mod.make_sharded_cohort_trainer(
+                task.loss_fn, local_opt, self.pspace
+            )
+        else:
+            self.cohort_trainer = client_mod.make_cohort_trainer(
+                task.loss_fn, local_opt, self.pspace
+            )
+        self.server_state, self.server_apply = server_mod.make_server(
+            train.algorithm, task.params0, train.server_lr
+        )
+        self.fleet = carbon_mod.make_fleet(
+            jax.random.PRNGKey(train.seed + 1), train.n_clients, cfg.carbon.hetero
+        )
+        self.policy, self.uses_rl = _resolve_selector(selector, cfg)
+        self.orch_state = orch.init_state(
+            train.n_clients, stale_in_state=cfg.orchestrator.stale_in_state
+        )
+        # SCAFFOLD per-client control variates
+        self.c_locals = (
+            [tree_zeros_like(task.params0, jnp.float32) for _ in range(train.n_clients)]
+            if train.algorithm == "scaffold"
+            else None
+        )
+        self.zero_corr = client_mod.zero_correction(task.params0)
+
+        # measured FLOPs of one full local round (compute model for emissions)
+        sample = task.clients[0].stacked_steps(train.batch_size, train.local_steps, 0)
+        sample = {k: jnp.asarray(v) for k, v in sample.items()}
+        try:
+            lowered = jax.jit(
+                lambda p, b: self.trainer(p, b, jnp.float32(0.0), self.zero_corr)
+            ).lower(task.params0, sample)
+            cost = lowered.compile().cost_analysis()
+            self.round_flops = float(cost.get("flops", 0.0)) or self._fallback_flops()
+        except Exception:
+            self.round_flops = self._fallback_flops()
+        self.model_bytes = float(self.pspace.nbytes)
+        self.param_dim = self.pspace.dim
+
+    def _fallback_flops(self) -> float:
+        return 6.0 * self.pspace.dim * self.train.batch_size * self.train.local_steps
+
+    # ------------------------------------------------------------------
+    def train_cohort(self, params, sel, step: int, corrections=None):
+        """Stack the selected clients' batches and run one vmapped
+        local-training dispatch against ``params``.
+
+        The single cohort-dispatch site both strategies share: per-client
+        step batches, FedProx adaptive mu, and the correction broadcast
+        (zero unless the caller passes SCAFFOLD control variates).  ``step``
+        seeds the clients' batch schedule (round index / dispatch wave).
+        """
+        train = self.train
+        batch_l = [
+            self.clients[ci].stacked_steps(train.batch_size, train.local_steps, step)
+            for ci in sel
+        ]
+        batches = {
+            k: jnp.asarray(np.stack([b[k] for b in batch_l])) for k in batch_l[0]
+        }
+        if train.algorithm == "fedprox":
+            mus = client_mod.adaptive_mu(
+                train.prox_mu, self.fleet.capability[jnp.asarray(sel)]
+            )
+        else:
+            mus = jnp.zeros(len(sel), jnp.float32)
+        if corrections is None:
+            corrections = jax.tree.map(
+                lambda z: jnp.broadcast_to(z, (len(sel),) + z.shape), self.zero_corr
+            )
+        return self.cohort_trainer(params, batches, mus, corrections)
+
+    # ------------------------------------------------------------------
+    def aggregate(
+        self, rows: jax.Array, weights, key
+    ) -> tuple[jax.Array, list[StageRecord]]:
+        """Run the privacy pipeline over (k, P) delta rows -> (MEAN row, records).
+
+        Everything is row-native: clipping, quantization, masking and the
+        kernel reductions all act on the ParamSpace representation; the
+        pytree form only reappears at the server-update boundary.  The
+        records tell the caller exactly which stages ran (the accountant
+        reads the ``noise`` record's sigma).
+        """
+        # independent streams for the one-time-pad masks and the DP noise —
+        # reusing one key would correlate the pads with the Gaussian draw
+        k_mask, k_noise = jax.random.split(key)
+        actx = AggregationContext(
+            self.pspace, len(weights), weights, k_mask, k_noise, self.weighted_sum
+        )
+        mean_row = self.pipeline.aggregate(rows, actx)
+        return mean_row, actx.records
+
+    def weighted_sum(self, rows: jax.Array, w) -> jax.Array:
+        """Σ_i w_i·row_i — the shared sync/async server reduction.
+
+        On TPU this is the fused Pallas buffer-aggregation kernel (one VMEM
+        pass over the (k, P) rows, pre-padded to whole blocks by the
+        ParamSpace); on CPU the Pallas interpreter would be strictly slower
+        than XLA, so a single einsum over the rows stays the hot path there.
+        Both strategies route through this method, which is what makes the
+        async sync-equivalence anchor bitwise.
+        """
+        w = jnp.asarray(w, jnp.float32)
+        if kernel_ops.default_interpret():
+            return jnp.einsum("kp,k->p", rows, w)
+        out = kernel_ops.staleness_aggregate(self.pspace.pad_rows(rows), w)
+        return out[: self.pspace.dim]
+
+    # ------------------------------------------------------------------
+    def evaluate(self, params) -> float:
+        accs, n = [], 0
+        for batch in eval_batches(self.test_data, 256):
+            m = self.eval_fn(params, {k: jnp.asarray(v) for k, v in batch.items()})
+            accs.append(float(m["acc"]))
+            n += 1
+            if n >= self.train.max_eval_batches:
+                break
+        return float(np.mean(accs)) if accs else 0.0
+
+
+def _resolve_selector(selector, cfg: ExperimentConfig) -> tuple[Callable, bool]:
+    """Selector registry lookup: None -> cfg.orchestrator.selection, a name
+    -> POLICIES[name], a callable -> used as-is (``uses_rl`` attribute opts
+    into the MARL reward update)."""
+    if selector is None:
+        selector = cfg.orchestrator.selection
+    if isinstance(selector, str):
+        return POLICIES[selector], policy_uses_rl(selector)
+    return selector, bool(getattr(selector, "uses_rl", False))

@@ -1,0 +1,125 @@
+"""Typed telemetry stream for ``repro.api`` runs.
+
+The legacy engines reported progress through an ad-hoc ``progress(dict)``
+callback and returned a history dict assembled inline in the round loop.
+Strategies now *emit* typed events — one :class:`RoundEvent` per synchronous
+round, one :class:`FlushEvent` per async buffer flush — and consumers
+subscribe as sinks:
+
+    HistoryRecorder   rebuilds the legacy history-dict schema (the engine's
+                      return value is produced by this sink, so the schema is
+                      byte-compatible with the old engines)
+    ConsoleSink       human-readable per-round/per-flush lines
+    CallbackSink      adapts a legacy ``progress(dict)`` callback
+
+A sink is anything with ``emit(event)``; pass instances via
+``Federation(..., telemetry=[...])``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Callable, Iterable, Protocol, runtime_checkable
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundEvent:
+    """One server-visible model update in the synchronous protocol."""
+
+    round: int
+    acc: float
+    loss: float
+    co2_g: float
+    cum_co2_g: float
+    duration_s: float
+    reward: float
+    eps_spent: float
+    selected: tuple[int, ...]
+
+    def history_row(self) -> dict:
+        """The legacy per-round history columns this event carries."""
+        return {
+            "round": self.round, "acc": self.acc, "co2_g": self.co2_g,
+            "cum_co2_g": self.cum_co2_g, "duration_s": self.duration_s,
+            "reward": self.reward, "loss": self.loss,
+            "eps_spent": self.eps_spent, "selected": list(self.selected),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushEvent(RoundEvent):
+    """One staleness-weighted buffer flush at an edge aggregator."""
+
+    staleness: float = 0.0   # mean client->edge staleness of the flushed cohort
+    region: int = 0          # edge region that flushed
+    sim_time_s: float = 0.0  # event-clock time of the flush
+
+    def history_row(self) -> dict:
+        row = super().history_row()
+        row.update(staleness=self.staleness, region=self.region,
+                   sim_time_s=self.sim_time_s)
+        return row
+
+
+@runtime_checkable
+class TelemetrySink(Protocol):
+    """Anything that consumes the event stream."""
+
+    def emit(self, event: RoundEvent) -> None: ...
+
+
+SYNC_HISTORY_KEYS = (
+    "round", "acc", "co2_g", "cum_co2_g", "duration_s",
+    "reward", "loss", "eps_spent", "selected",
+)
+ASYNC_HISTORY_KEYS = SYNC_HISTORY_KEYS + ("staleness", "region", "sim_time_s")
+
+
+class HistoryRecorder:
+    """Rebuilds the legacy history dict from the event stream.
+
+    ``keys`` fixes the schema up front (so a zero-event run still returns
+    every column, exactly as the old engines did).
+    """
+
+    def __init__(self, keys: Iterable[str] = SYNC_HISTORY_KEYS):
+        self.history: dict = {k: [] for k in keys}
+
+    def emit(self, event: RoundEvent) -> None:
+        row = event.history_row()
+        for k in self.history:
+            self.history[k].append(row[k])
+
+
+class ConsoleSink:
+    """Prints one line per event (every ``every``-th event)."""
+
+    def __init__(self, every: int = 1, stream=None):
+        self.every = max(1, every)
+        self.stream = stream or sys.stdout
+        self._n = 0
+
+    def emit(self, event: RoundEvent) -> None:
+        self._n += 1
+        if (self._n - 1) % self.every:
+            return
+        tag = "flush" if isinstance(event, FlushEvent) else "round"
+        print(
+            f"{tag} {event.round:3d}  acc={event.acc:.3f}  "
+            f"CO2={event.co2_g:.0f} g  loss={event.loss:.3f}",
+            file=self.stream, flush=True,
+        )
+
+
+class CallbackSink:
+    """Adapts a legacy ``progress(dict)`` callback to the event stream."""
+
+    LEGACY_FIELDS = ("round", "acc", "co2_g", "loss")
+
+    def __init__(self, fn: Callable[[dict], None], fields: tuple[str, ...] = LEGACY_FIELDS):
+        self.fn = fn
+        self.fields = fields
+
+    def emit(self, event: RoundEvent) -> None:
+        row = event.history_row()
+        self.fn({k: row[k] for k in self.fields})

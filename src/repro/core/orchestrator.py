@@ -47,6 +47,13 @@ N_CARBON = 3  # low / medium / high
 N_TREND = 2  # accuracy up / down
 N_UTIL = 3  # utilization-history bucket
 N_STATES = N_CARBON * N_TREND * N_UTIL
+# Optional fourth s_t factor (Eq. 2 extended): the fleet-mean straggler EMA,
+# discretized into fresh / lagging / chronic.  Enabled per-experiment via
+# ``init_state(..., stale_in_state=True)`` (OrchestratorConfig.stale_in_state);
+# the default keeps the paper's three-factor state and the score-penalty
+# straggler handling (LAMBDA_STALE) for ablation.
+N_STALE = 3
+STALE_EDGES = (0.25, 1.5)  # EMA bucket edges: fresh < 0.25 <= lagging < 1.5 <= chronic
 
 
 class OrchestratorState(NamedTuple):
@@ -59,9 +66,16 @@ class OrchestratorState(NamedTuple):
     stale_ema: jax.Array  # (n_providers,) EMA of observed staleness/latency
 
 
-def init_state(n_providers: int, eps0: float = 0.3) -> OrchestratorState:
+def init_state(
+    n_providers: int, eps0: float = 0.3, *, stale_in_state: bool = False
+) -> OrchestratorState:
+    """``stale_in_state`` widens the Q-table to ``N_STATES * N_STALE`` rows:
+    the discretized straggler EMA becomes a fourth state factor.  The factor
+    count is carried by the table shape itself (no extra field), so the
+    default table is bit-identical to the three-factor encoding."""
+    n_rows = N_STATES * (N_STALE if stale_in_state else 1)
     return OrchestratorState(
-        q=jnp.zeros((N_STATES, n_providers), jnp.float32),
+        q=jnp.zeros((n_rows, n_providers), jnp.float32),
         eps=jnp.float32(eps0),
         util_ema=jnp.zeros((n_providers,), jnp.float32),
         last_acc=jnp.float32(0.0),
@@ -92,6 +106,24 @@ def encode_state(mean_intensity, acc_trend_up, mean_util) -> jax.Array:
     a = acc_trend_up.astype(jnp.int32)
     u = jnp.clip((mean_util * N_UTIL).astype(jnp.int32), 0, N_UTIL - 1)
     return (c * N_TREND + a) * N_UTIL + u
+
+
+def stale_bucket(stale_mean) -> jax.Array:
+    """Discretize the fleet-mean straggler EMA into its N_STALE classes."""
+    edges = jnp.asarray(STALE_EDGES, jnp.float32)
+    return jnp.sum(jnp.asarray(stale_mean, jnp.float32) > edges).astype(jnp.int32)
+
+
+def state_index(st: "OrchestratorState", mean_intensity, acc_trend_up, mean_util) -> jax.Array:
+    """s_t under whichever encoding ``st`` was initialized with.
+
+    A stale-extended table (``stale_in_state=True``) is recognized by its row
+    count — a static shape, so the branch is jit-safe — and gets the fourth
+    factor appended as the fastest-varying digit."""
+    s = encode_state(mean_intensity, acc_trend_up, mean_util)
+    if st.q.shape[0] != N_STATES:
+        s = s * N_STALE + stale_bucket(jnp.mean(st.stale_ema))
+    return s
 
 
 def green_corrected_q(q_row, fleet: carbon_mod.ProviderFleet, intensity) -> jax.Array:
@@ -172,7 +204,7 @@ def update(
     d_eff = eff - st.last_eff
     r = reward(d_acc, d_eff, co2_g)
 
-    s_new = encode_state(mean_intensity, d_acc > 0, jnp.mean(st.util_ema))
+    s_new = state_index(st, mean_intensity, d_acc > 0, jnp.mean(st.util_ema))
     target = r + Q_DISCOUNT * jnp.max(st.q[s_new])
     row = st.q[st.state_idx]
     upd = row + Q_LR * (target - row)

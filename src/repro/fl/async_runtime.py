@@ -1,80 +1,29 @@
-"""Asynchronous + hierarchical FL runtime (FedBuff-style buffered aggregation).
+"""DEPRECATED legacy entry point — use ``repro.api`` instead.
 
-The synchronous engine (``repro.fl.simulation.Simulation``) runs the paper's
-§IV protocol in lock-step: every round waits for the slowest of the selected
-clients.  This module removes the two scalability bottlenecks the Metaverse
-FL literature identifies — straggler latency and flat single-server
-aggregation — with an event-driven engine:
+The event-driven ``AsyncHierSimulation(Simulation)`` engine moved to
+``repro.api.AsyncHierStrategy``, which *composes* the shared
+``repro.api.RuntimeContext`` instead of inheriting the synchronous engine —
+the inheritance coupling this module used to carry is gone.  Select it with
+``TopologyConfig(mode="async_hier", ...)`` or pass the strategy instance to
+``Federation`` directly.
 
-  * **Buffered async aggregation** — each region's edge aggregator applies an
-    update whenever K client deltas have arrived (the buffer), each delta
-    down-weighted by ``1/sqrt(1 + staleness)`` where staleness counts how
-    many edge model versions elapsed while the client trained.  The buffer
-    reduction runs through the fused Pallas ``staleness_agg`` kernel.
-    Buffered deltas are device-resident ``(P,)`` ParamSpace rows (slices of
-    the cohort trainer's ``(k, P)`` output) — flushes *stream* rows into
-    the kernels; per-client delta pytrees are never materialized host-side.
-  * **Edge→global hierarchy** — clients are clustered into phase-coherent
-    regions (``repro.fl.hierarchy``); each region has its own carbon trace,
-    its own selection-policy + MARL-orchestrator instance, and pushes its
-    accumulated delta row to the global server every ``edge_sync_every``
-    flushes, down-weighted by ``1/sqrt(1 + global_staleness)`` where the
-    global staleness counts global model versions applied (by other
-    regions) since this edge last synced.
-  * **Staleness-aware selection** — every flush feeds the observed per-client
-    staleness into the MARL orchestrator's straggler EMA
-    (``orchestrator.observe_staleness``), so the ``rl``/``rl_green``
-    policies learn to demote chronic stragglers, not just the modeled
-    round duration the reward already sees.
-  * **Event-driven clock** — client completion times come from the fleet
-    capability/bandwidth latency model (``carbon.client_durations_s``),
-    scaled by ``latency_spread``, so stragglers, carbon phase and the MARL
-    reward interact with staleness.
-
-Secure aggregation composes with the async path exactly as in the sync
-engine: buffered deltas are pre-scaled by their (staleness-adjusted) weights
-client-side, quantized to the uint32 ring, one-time-padded, and unmasked +
-dequantized by the fused ``masked_agg`` Pallas kernel.  Client-level DP uses
-uniform weights (the clip-based sensitivity bound assumes them), so DP runs
-ignore staleness weighting by design.
-
-**Sync-equivalence anchor**: with ``latency_spread=0`` (no completion-time
-spread inside a wave), ``buffer_k = clients_per_round = concurrency``, one
-region and ``edge_sync_every=1``, every buffer flush is exactly one
-synchronous round — same PRNG schedule, same cohort trainer, same
-aggregation kernel, same server update — and ``run()`` reproduces
-``Simulation.run()`` trajectories.  This degenerate mode is the subsystem's
-correctness proof (see ``tests/test_async.py``).  RL-based selection also
-matches because the per-flush efficiency signal is the *modeled* cohort
-duration, not the event clock; the straggler EMA stays identically zero
-(staleness never emerges), and the global-staleness weight is identically
-1 (a single region syncing every flush never lags the global model).
+This shim keeps the old constructor and history schema working exactly as
+``repro.fl.simulation`` does for the sync engine: ``AsyncFLConfig`` maps 1:1
+onto the structured blocks (the async axes land in ``TopologyConfig``) and
+runtime attributes (``regions``, ``buffer_k``, ``global_version``,
+``server_state``, ...) resolve against the strategy and context.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
-from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import carbon as carbon_mod
-from repro.core import orchestrator as orch
-from repro.core.selection import POLICIES, policy_uses_rl
-from repro.data.pipeline import ClientDataset
-from repro.fl import client as client_mod
-from repro.fl import hierarchy
-from repro.fl.simulation import FLConfig, Simulation
-from repro.privacy import dp as dp_mod
-from repro.utils import PyTree
+from repro.fl.simulation import FLConfig, Simulation, experiment_config
 
 
 @dataclasses.dataclass
 class AsyncFLConfig(FLConfig):
-    """FLConfig + the async/hierarchy scenario axes.
+    """DEPRECATED ``FLConfig`` + the async/hierarchy scenario axes
+    (now ``repro.api.TopologyConfig``).
 
     ``rounds`` counts *global buffer flushes* (server-visible updates), so
     histories stay length-comparable with the synchronous engine.
@@ -89,285 +38,17 @@ class AsyncFLConfig(FLConfig):
 
 
 class AsyncHierSimulation(Simulation):
-    """Event-driven async + hierarchical engine; ``run()`` returns the same
-    history schema as ``Simulation`` plus ``staleness``, ``region``,
-    ``sim_time_s`` per flush and ``buffer_flushes`` / ``co2_by_region_g``
-    summaries."""
+    """DEPRECATED facade over ``repro.api.Federation`` with the
+    ``async_hier`` strategy; ``run()`` returns the same history schema as
+    ``Simulation`` plus ``staleness``, ``region``, ``sim_time_s`` per flush
+    and ``buffer_flushes`` / ``co2_by_region_g`` summaries."""
 
-    def __init__(
-        self,
-        cfg: AsyncFLConfig,
-        loss_fn: Callable,
-        eval_fn: Callable,
-        params0: PyTree,
-        clients: list[ClientDataset],
-        test_data: dict[str, np.ndarray],
-    ):
-        if cfg.algorithm in ("scaffold", "fednova"):
-            raise ValueError(
-                f"{cfg.algorithm!r} needs synchronized per-cohort state "
-                "(control variates / step normalization) and is not defined "
-                "for buffered-async aggregation; use the sync Simulation."
-            )
-        if cfg.edge_sync_every < 1:
-            raise ValueError("edge_sync_every must be >= 1")
-        if cfg.staleness_cap < 0:
-            raise ValueError("staleness_cap must be >= 0")
-        if cfg.buffer_k < 0 or cfg.concurrency < 0:
-            raise ValueError("buffer_k and concurrency must be >= 0 (0 = clients_per_round)")
-        super().__init__(cfg, loss_fn, eval_fn, params0, clients, test_data)
-        self.buffer_k = cfg.buffer_k or cfg.clients_per_round
-        self.concurrency = cfg.concurrency or cfg.clients_per_round
-        # constant for the run: per-client latency vector the event clock draws from
-        self.client_durs = np.asarray(
-            carbon_mod.client_durations_s(self.fleet, self.round_flops, self.model_bytes)
+    _mode = "async_hier"
+
+    def _experiment_config(self, cfg: AsyncFLConfig):
+        return experiment_config(
+            cfg, mode=self._mode,
+            buffer_k=cfg.buffer_k, staleness_cap=cfg.staleness_cap,
+            latency_spread=cfg.latency_spread, concurrency=cfg.concurrency,
+            n_regions=cfg.n_regions, edge_sync_every=cfg.edge_sync_every,
         )
-
-        root = jax.random.PRNGKey(cfg.seed)
-        self.global_version = 0  # bumped per edge->global server update
-        self.regions: list[hierarchy.Region] = []
-        for ridx, ids in enumerate(hierarchy.assign_regions(self.fleet, cfg.n_regions)):
-            # a single region keeps the root key so its PRNG stream (and
-            # therefore selection/masking/noise) is bitwise the sync engine's
-            key = root if cfg.n_regions == 1 else jax.random.fold_in(root, ridx)
-            self.regions.append(hierarchy.Region(
-                idx=ridx,
-                clients=ids,
-                fleet=hierarchy.subfleet(self.fleet, ids),
-                policy=POLICIES[cfg.selection],
-                orch_state=orch.init_state(len(ids)),
-                key=key,
-                edge_params=self.server_state.params,
-                edge_accum=self.pspace.zeros_row(),
-            ))
-
-    # ------------------------------------------------------------------
-    def _dispatch(self, reg: hierarchy.Region, now: float, heap: list) -> None:
-        """Select a wave in ``reg``, train it against the current edge model,
-        and enqueue per-client completion events."""
-        cfg = self.cfg
-        k = min(cfg.clients_per_round, reg.n)
-        reg.key, k_sel, k_int, k_agg, k_noise = jax.random.split(reg.key, 5)
-        t_hours = reg.waves * cfg.round_hours
-        inten = carbon_mod.intensity(reg.fleet, t_hours, k_int)
-        mask, reg.orch_state = reg.policy(k_sel, reg.orch_state, reg.fleet, inten, k)
-        sel_local = np.flatnonzero(np.asarray(mask))[:k]
-        sel_global = reg.global_ids(sel_local)
-
-        batch_l = [
-            self.clients[ci].stacked_steps(cfg.batch_size, cfg.local_steps, reg.waves)
-            for ci in sel_global
-        ]
-        batches = {
-            kk: jnp.asarray(np.stack([b[kk] for b in batch_l])) for kk in batch_l[0]
-        }
-        if cfg.algorithm == "fedprox":
-            mus = client_mod.adaptive_mu(
-                cfg.prox_mu, self.fleet.capability[jnp.asarray(sel_global)]
-            )
-        else:
-            mus = jnp.zeros(len(sel_global), jnp.float32)
-        corrs = jax.tree.map(
-            lambda z: jnp.broadcast_to(z, (len(sel_global),) + z.shape), self.zero_corr
-        )
-        res = self.cohort_trainer(reg.edge_params, batches, mus, corrs)
-
-        durs = self.client_durs[np.asarray(sel_global)]
-        mean_d = float(np.mean(durs))
-        # latency_spread interpolates between "wave lands together" (0, the
-        # sync-equivalence anchor) and the full heterogeneous fleet model (1)
-        comp = now + carbon_mod.ROUND_OVERHEAD_S + mean_d + cfg.latency_spread * (durs - mean_d)
-        for j, (ci, li) in enumerate(zip(sel_global, sel_local)):
-            entry = hierarchy.BufferEntry(
-                client=int(ci), local=int(li), version=reg.version, wave=reg.waves,
-                weight=float(len(self.clients[ci])),
-                row=res.rows[j],  # device-resident (P,) slice — no host pytree
-                loss=float(res.loss_last[j]), t_hours=t_hours, k_agg=k_agg,
-                inten=inten,
-            )
-            heapq.heappush(heap, (float(comp[j]), next(self._seq), reg.idx, entry))
-        reg.waves += 1
-        reg.inflight += len(sel_global)
-
-    def _maybe_dispatch(self, reg: hierarchy.Region, now: float, heap: list) -> None:
-        k = min(self.cfg.clients_per_round, reg.n)
-        while reg.inflight + k <= max(self.concurrency, k):
-            self._dispatch(reg, now, heap)
-
-    # ------------------------------------------------------------------
-    def _edge_sync(self, reg: hierarchy.Region) -> None:
-        """Push the region's accumulated delta row to the global server.
-
-        The accumulator is tracked additively (never re-derived as
-        edge_params - global_params) and the pytree form of the delta is
-        produced exactly once, at the server-update boundary, so with one
-        region and edge_sync_every=1 the global update is bitwise the flat
-        engine's.  The sync is weighted by the *global-tier* staleness
-        ``1/sqrt(1 + tau_g)`` where ``tau_g`` counts global model versions
-        applied since this edge last synced — a region that lagged while
-        others advanced the global model pushes a discounted delta instead
-        of an unweighted one.  tau_g == 0 (single region, or no interleaved
-        syncs) keeps the weight exactly 1.
-        """
-        if reg.pending == 0:
-            return
-        tau_g = self.global_version - reg.synced_version
-        w_g = float(hierarchy.staleness_weight(tau_g, self.cfg.staleness_cap))
-        scale = w_g * reg.n / self.cfg.n_clients
-        row = reg.edge_accum if scale == 1.0 else reg.edge_accum * scale
-        self.server_state = self.server_apply(self.server_state, self.pspace.unravel(row))
-        self.global_version += 1
-        reg.synced_version = self.global_version
-        reg.edge_params = self.server_state.params
-        reg.edge_accum = self.pspace.zeros_row()
-        reg.pending = 0
-
-    def _emissions_for(self, entries) -> tuple[float, np.ndarray]:
-        """gCO2 of the training behind ``entries``, grouped by dispatch phase.
-
-        Returns (total_g, union participation mask over the global fleet).
-        """
-        co2 = 0.0
-        union = np.zeros(self.cfg.n_clients, bool)
-        for t in dict.fromkeys(e.t_hours for e in entries):  # stable unique
-            ids = np.asarray([e.client for e in entries if e.t_hours == t])
-            m = jnp.zeros(self.cfg.n_clients, bool).at[jnp.asarray(ids)].set(True)
-            g, _ = carbon_mod.round_emissions_g(self.fleet, m, t, self.round_flops, None)
-            co2 += float(g)
-            union[ids] = True
-        return co2, union
-
-    def _flush(self, reg: hierarchy.Region, trigger: hierarchy.BufferEntry):
-        """Apply one staleness-weighted buffer flush at ``reg``'s edge.
-
-        Returns the per-flush record (co2, duration, staleness, ...) for the
-        history; the aggregation itself reuses ``Simulation._aggregate`` with
-        staleness-adjusted weights, so plain / secure-agg / DP paths behave
-        exactly as documented there.
-        """
-        cfg = self.cfg
-        entries = reg.buffer[: self.buffer_k]
-        reg.buffer = reg.buffer[self.buffer_k:]
-        taus = np.asarray([reg.version - e.version for e in entries])
-        s = hierarchy.staleness_weight(taus, cfg.staleness_cap)
-        eff_w = [e.weight * float(si) for e, si in zip(entries, s)]
-        rows = jnp.stack([e.row for e in entries])  # (k, P) — stays on device
-        # one wave can trigger several flushes (buffer_k < wave size): the
-        # first reuses the wave's k_agg verbatim (sync-equivalence anchor),
-        # later ones fold the count in so no mask/noise stream ever repeats
-        n_prior = reg.wave_flushes.get(trigger.wave, 0)
-        reg.wave_flushes[trigger.wave] = n_prior + 1
-        k_flush = trigger.k_agg if n_prior == 0 else jax.random.fold_in(trigger.k_agg, n_prior)
-        mean_row = self._aggregate(rows, eff_w, k_flush)
-        reg.edge_params = self.pspace.add_to_tree(reg.edge_params, mean_row)
-        reg.edge_accum = reg.edge_accum + mean_row
-        reg.version += 1
-        reg.flushes += 1
-        reg.pending += 1
-        if reg.flushes % cfg.edge_sync_every == 0:
-            self._edge_sync(reg)
-
-        # ---- carbon + modeled-time accounting (per dispatch-phase group) --
-        co2, union = self._emissions_for(entries)
-        dur = float(carbon_mod.round_duration_s(
-            self.fleet, jnp.asarray(union), self.round_flops, self.model_bytes
-        ))
-        reg.co2_g += co2
-        flush_mask = np.zeros(reg.n, bool)
-        flush_mask[[e.local for e in entries]] = True
-        return entries, taus, co2, dur, flush_mask
-
-    # ------------------------------------------------------------------
-    def run(self, progress: Optional[Callable[[dict], None]] = None) -> dict:
-        cfg = self.cfg
-        hist: dict[str, list] = {
-            "round": [], "acc": [], "co2_g": [], "cum_co2_g": [], "duration_s": [],
-            "reward": [], "loss": [], "eps_spent": [], "selected": [],
-            "staleness": [], "region": [], "sim_time_s": [],
-        }
-        cum_co2 = 0.0
-        acc = self.evaluate(self.server_state.params)
-        last_acc = acc
-        heap: list = []
-        self._seq = itertools.count()
-        now = 0.0
-        for reg in self.regions:
-            self._maybe_dispatch(reg, now, heap)
-
-        flushes = 0
-        while flushes < cfg.rounds and heap:
-            now, _, ridx, entry = heapq.heappop(heap)
-            reg = self.regions[ridx]
-            reg.inflight -= 1
-            reg.buffer.append(entry)
-            while len(reg.buffer) >= self.buffer_k and flushes < cfg.rounds:
-                entries, taus, co2, dur, flush_mask = self._flush(reg, entry)
-                # straggler EMA: observed staleness per flushed client feeds
-                # the MARL state so selection can demote chronic stragglers
-                # (zero in the sync-equivalence regime -> no behavior change).
-                # maximum.at: a client with two entries in one flush records
-                # its worst staleness, not whichever entry came last.
-                tau_vec = np.zeros(reg.n, np.float32)
-                np.maximum.at(tau_vec, [e.local for e in entries], taus)
-                reg.orch_state = orch.observe_staleness(reg.orch_state, flush_mask, tau_vec)
-                cum_co2 += co2
-                flushes += 1
-                if flushes % cfg.eval_every == 0 or flushes == cfg.rounds:
-                    acc = self.evaluate(self.server_state.params)
-                eff = -dur / 100.0
-                if policy_uses_rl(cfg.selection):
-                    reg.orch_state, r = orch.update(
-                        reg.orch_state, flush_mask, jnp.float32(acc),
-                        jnp.float32(eff), jnp.float32(co2), jnp.mean(entry.inten),
-                    )
-                    r = float(r)
-                else:
-                    r = 0.0
-                eps_spent = (
-                    dp_mod.spent_epsilon(cfg.dp, flushes) if cfg.dp is not None else 0.0
-                )
-                hist["round"].append(flushes - 1)
-                hist["acc"].append(acc)
-                hist["co2_g"].append(co2)
-                hist["cum_co2_g"].append(cum_co2)
-                hist["duration_s"].append(dur)
-                hist["reward"].append(r)
-                hist["loss"].append(float(np.mean([e.loss for e in entries])))
-                hist["eps_spent"].append(eps_spent)
-                hist["selected"].append([e.client for e in entries])
-                hist["staleness"].append(float(np.mean(taus)))
-                hist["region"].append(reg.idx)
-                hist["sim_time_s"].append(now)
-                last_acc = acc
-                if progress:
-                    progress({k: hist[k][-1] for k in ("round", "acc", "co2_g", "loss")})
-            if flushes < cfg.rounds:
-                self._maybe_dispatch(reg, now, heap)
-
-        # drain: push any un-synced edge progress to the global model, and
-        # charge emissions for training that was dispatched but never
-        # flushed (in-flight at the rounds cap or left in a partial buffer)
-        # — the energy was spent whether or not a flush consumed the delta
-        unflushed = 0.0
-        leftovers: dict[int, list] = {reg.idx: list(reg.buffer) for reg in self.regions}
-        for _, _, ridx, entry in heap:
-            leftovers[ridx].append(entry)
-        for reg in self.regions:
-            g, _ = self._emissions_for(leftovers[reg.idx])
-            reg.co2_g += g
-            unflushed += g
-        cum_co2 += unflushed
-        pending = any(reg.pending for reg in self.regions)
-        for reg in self.regions:
-            self._edge_sync(reg)
-        if pending:
-            last_acc = self.evaluate(self.server_state.params)
-        hist["final_acc"] = last_acc
-        hist["mean_co2_g"] = float(np.mean(hist["co2_g"])) if hist["co2_g"] else 0.0
-        hist["mean_duration_s"] = float(np.mean(hist["duration_s"])) if hist["duration_s"] else 0.0
-        hist["cum_co2_total_g"] = cum_co2
-        hist["unflushed_co2_g"] = unflushed
-        hist["mean_staleness"] = float(np.mean(hist["staleness"])) if hist["staleness"] else 0.0
-        hist["buffer_flushes"] = {reg.idx: reg.flushes for reg in self.regions}
-        hist["co2_by_region_g"] = {reg.idx: reg.co2_g for reg in self.regions}
-        return hist

@@ -1,54 +1,40 @@
-"""The federated-learning experiment engine (paper §IV).
+"""DEPRECATED legacy entry point — use ``repro.api`` instead.
 
-Wires every subsystem together for one experiment run:
+The monolithic ``Simulation`` engine this module used to define has been
+decomposed into the composable public API:
 
-    data partition (Dirichlet non-IID)        repro.data.partition
-    provider fleet + carbon model (Eq. 1/8)   repro.core.carbon
-    client selection (random/green/rl/rl+g)   repro.core.selection
-    local training (FedAvg/Prox/SCAFFOLD)     repro.fl.client (or the
-                                              sharded engine, launch.cohort)
-    privacy pipeline (clip->quant->mask->DP)  repro.privacy.*
-    server optimizer (FedAvg/Adam/Yogi/Nova)  repro.fl.server
-    MARL update (Eq. 3-5)                     repro.core.orchestrator
+    repro.api.Federation        the experiment facade (strategy/selector/
+                                privacy-pipeline/telemetry composition)
+    repro.api.SyncStrategy      the former ``Simulation.run`` round loop
+    repro.api.ExperimentConfig  structured configs replacing flat FLConfig
 
-Dataflow is flat-row end to end (repro.fl.paramspace): the cohort trainer
-returns (k, P) float32 delta rows, the privacy stack clips/quantizes/masks
-rows, the Pallas kernels reduce rows, and the pytree form of an update is
-materialized exactly once — at the server-optimizer boundary.
-
-The paper's protocol: 50 clients, 10 per round (20%), 5 local epochs,
-batch 32, 100 rounds, Dirichlet(0.5).  We fix the local step count per round
-(epochs x mean-batches) so every client jits once.
-
-Energy/emissions: per-round client FLOPs are measured from the *compiled*
-local step (``cost_analysis``), fed through the §III-D device/carbon model.
+This shim keeps the old constructor signature and the exact history-dict
+schema working: ``FLConfig`` maps 1:1 onto the structured config blocks (see
+the README migration table) and ``Simulation`` delegates to a ``Federation``
+built from it, re-exposing the runtime attributes (``fleet``,
+``server_state``, ``pspace``, ...) the old engine carried.  Constructing a
+``Simulation`` emits a ``DeprecationWarning``; nothing inside ``src/repro``
+may import these legacy names (CI enforces the import direction — the shim
+depends on ``repro.api``, never the reverse).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import carbon as carbon_mod
-from repro.core import orchestrator as orch
-from repro.core.selection import POLICIES, policy_uses_rl
-from repro.data.pipeline import ClientDataset, eval_batches
-from repro.fl import client as client_mod
-from repro.fl import server as server_mod
-from repro.fl.paramspace import ParamSpace
-from repro.kernels import ops as kernel_ops
-from repro.optim import optimizers as opt_mod
+from repro.data.pipeline import ClientDataset
 from repro.privacy import dp as dp_mod
-from repro.privacy import quantize, secure_agg
-from repro.utils import PyTree, tree_zeros_like
+from repro.utils import PyTree
 
 
 @dataclasses.dataclass
 class FLConfig:
+    """DEPRECATED flat config — maps 1:1 onto ``repro.api.ExperimentConfig``
+    blocks via :func:`experiment_config` (README has the field table)."""
+
     algorithm: str = "fedavg"     # fedavg | fedprox | fedadam | fedyogi | scaffold | fednova
     selection: str = "random"     # random | green | rl | rl_green
     sharded: bool = False         # shard cohort training over the mesh data axis
@@ -72,8 +58,47 @@ class FLConfig:
     max_eval_batches: int = 20
 
 
+def experiment_config(cfg: FLConfig, *, mode: str = "sync", **topology_kw):
+    """Map a flat legacy config onto the structured ``ExperimentConfig``.
+
+    ``topology_kw`` carries the async axes when the async shim calls this
+    with ``mode="async_hier"``.
+    """
+    from repro import api
+
+    return api.ExperimentConfig(
+        training=api.TrainingConfig(
+            algorithm=cfg.algorithm, n_clients=cfg.n_clients,
+            clients_per_round=cfg.clients_per_round, rounds=cfg.rounds,
+            local_steps=cfg.local_steps, batch_size=cfg.batch_size,
+            client_lr=cfg.client_lr, client_momentum=cfg.client_momentum,
+            server_lr=cfg.server_lr, prox_mu=cfg.prox_mu, sharded=cfg.sharded,
+            seed=cfg.seed, eval_every=cfg.eval_every,
+            max_eval_batches=cfg.max_eval_batches,
+        ),
+        privacy=api.PrivacyConfig(
+            secure_agg=cfg.secure_agg, sa_bits=cfg.sa_bits, sa_clip=cfg.sa_clip,
+            dp=cfg.dp,
+        ),
+        topology=api.TopologyConfig(mode=mode, **topology_kw),
+        carbon=api.CarbonConfig(round_hours=cfg.round_hours, hetero=cfg.hetero),
+        orchestrator=api.OrchestratorConfig(selection=cfg.selection),
+    )
+
+
 class Simulation:
-    """One federated experiment. ``run()`` returns the history dict."""
+    """DEPRECATED facade over ``repro.api.Federation`` (sync strategy).
+
+    ``run()`` returns the same history dict as ever; runtime attributes the
+    old engine exposed (``fleet``, ``server_state``, ``pspace``, ``regions``,
+    ``buffer_k``, ...) resolve against the federation's strategy and shared
+    runtime context.  One deliberate difference: ``run()`` is single-shot
+    (a second call raises) — the old engine would silently *continue*
+    training from its mutated key/optimizer state, which was never a
+    defined protocol; build a fresh instance to rerun.
+    """
+
+    _mode = "sync"
 
     def __init__(
         self,
@@ -84,244 +109,36 @@ class Simulation:
         clients: list[ClientDataset],
         test_data: dict[str, np.ndarray],
     ):
-        assert len(clients) == cfg.n_clients
+        warnings.warn(
+            f"{type(self).__name__} is deprecated; compose the experiment with "
+            "repro.api.Federation (see the README 'Public API' section)",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro import api
+
         self.cfg = cfg
-        self.clients = clients
-        self.test_data = test_data
-        self.eval_fn = jax.jit(eval_fn)
-        self.key = jax.random.PRNGKey(cfg.seed)
-
-        # SCAFFOLD's control-variate correction assumes plain SGD clients
-        # (Karimireddy et al. Alg. 1); momentum double-applies the correction.
-        if cfg.algorithm == "scaffold":
-            local_opt = opt_mod.sgd(cfg.client_lr)
-        else:
-            local_opt = opt_mod.momentum(cfg.client_lr, beta=cfg.client_momentum)
-        # the canonical pytree<->rows mapping every downstream layer shares
-        self.pspace = ParamSpace.build(params0)
-        self.trainer = client_mod.make_local_trainer(loss_fn, local_opt)
-        if cfg.sharded:
-            from repro.launch import cohort as cohort_mod  # lazy: touches devices
-
-            self.cohort_trainer = cohort_mod.make_sharded_cohort_trainer(
-                loss_fn, local_opt, self.pspace
-            )
-        else:
-            self.cohort_trainer = client_mod.make_cohort_trainer(
-                loss_fn, local_opt, self.pspace
-            )
-        self.server_state, self.server_apply = server_mod.make_server(
-            cfg.algorithm, params0, cfg.server_lr
+        self._fed = api.Federation(
+            self._experiment_config(cfg),
+            api.FederatedTask(loss_fn, eval_fn, params0, clients, test_data),
         )
-        self.fleet = carbon_mod.make_fleet(jax.random.PRNGKey(cfg.seed + 1), cfg.n_clients, cfg.hetero)
-        self.orch_state = orch.init_state(cfg.n_clients)
-        self.policy = POLICIES[cfg.selection]
-        # SCAFFOLD per-client control variates
-        self.c_locals = (
-            [tree_zeros_like(params0, jnp.float32) for _ in range(cfg.n_clients)]
-            if cfg.algorithm == "scaffold"
-            else None
-        )
-        self.zero_corr = client_mod.zero_correction(params0)
 
-        # measured FLOPs of one full local round (compute model for emissions)
-        sample = clients[0].stacked_steps(cfg.batch_size, cfg.local_steps, 0)
-        sample = {k: jnp.asarray(v) for k, v in sample.items()}
-        try:
-            lowered = jax.jit(
-                lambda p, b: self.trainer(p, b, jnp.float32(0.0), self.zero_corr)
-            ).lower(params0, sample)
-            cost = lowered.compile().cost_analysis()
-            self.round_flops = float(cost.get("flops", 0.0)) or self._fallback_flops(params0)
-        except Exception:
-            self.round_flops = self._fallback_flops(params0)
-        self.model_bytes = float(self.pspace.nbytes)
-        self.param_dim = self.pspace.dim
+    def _experiment_config(self, cfg: FLConfig):
+        return experiment_config(cfg, mode=self._mode)
 
-    def _fallback_flops(self, params0) -> float:
-        return 6.0 * self.pspace.dim * self.cfg.batch_size * self.cfg.local_steps
-
-    # ------------------------------------------------------------------
-    def _aggregate(self, rows: jax.Array, weights, key) -> jax.Array:
-        """Plain or privacy-preserving aggregation of (k, P) delta rows -> MEAN row.
-
-        Everything here is row-native: clipping, quantization, masking and
-        the kernel reductions all act on the ParamSpace representation; the
-        pytree form only reappears at the server-update boundary.
-        """
-        cfg = self.cfg
-        k = len(weights)
-        # independent streams for the one-time-pad masks and the DP noise —
-        # reusing one key would correlate the pads with the Gaussian draw
-        k_mask, k_noise = jax.random.split(key)
-        if cfg.dp is not None:
-            # client-level DP: clip each row, uniform weights, noise on sum
-            clipped, _ = dp_mod.clip_rows(rows, cfg.dp.clip)
-            summed = self._sum(clipped, k, k_mask, cfg.dp.clip, cfg.dp.bits)
-            noised = dp_mod.add_noise(k_noise, summed, cfg.dp)
-            return noised * (1.0 / k)
-        w = jnp.asarray(np.asarray(weights, np.float64) / np.sum(weights), jnp.float32)
-        if cfg.secure_agg:
-            # weighted aggregation under masking: clients pre-scale by n_i/sum
-            scaled = rows * (w * k)[:, None]
-            summed = self._sum(scaled, k, k_mask, cfg.sa_clip, cfg.sa_bits)
-            return summed * (1.0 / k)
-        return self._weighted_sum(rows, w)
-
-    def _weighted_sum(self, rows: jax.Array, w) -> jax.Array:
-        """Σ_i w_i·row_i — the shared sync/async server reduction.
-
-        On TPU this is the fused Pallas buffer-aggregation kernel (one VMEM
-        pass over the (k, P) rows, pre-padded to whole blocks by the
-        ParamSpace); on CPU the Pallas interpreter would be strictly slower
-        than XLA, so a single einsum over the rows stays the hot path there.
-        Both engines route through this method, which is what makes the
-        async sync-equivalence anchor bitwise.
-        """
-        w = jnp.asarray(w, jnp.float32)
-        if kernel_ops.default_interpret():
-            return jnp.einsum("kp,k->p", rows, w)
-        out = kernel_ops.staleness_aggregate(self.pspace.pad_rows(rows), w)
-        return out[: self.pspace.dim]
-
-    def _sum(self, rows: jax.Array, k: int, key, clip: float, bits: int) -> jax.Array:
-        """Masked-ring (homomorphic) sum of (k, P) delta rows (uint32 ring).
-
-        Client side: quantize the rows to the ring and add per-client
-        one-time pads.  Server side: the fused Pallas ``masked_aggregate``
-        kernel performs unmask + dequantize in one pass (interpret mode
-        auto-selected by backend); it only ever sees ciphertexts and the
-        mask streams.  Rows are pre-padded to whole kernel blocks.
-        """
-        quantize.check_headroom(bits, k)
-        rows = self.pspace.pad_rows(rows)
-        qs = quantize.encode(rows, clip, bits)
-        masks = secure_agg.mask_rows(key, k, rows.shape[1])
-        masked = qs + masks  # uint32 wraps = mod 2^32
-        dec = kernel_ops.masked_aggregate(masked, masks, clip, bits)
-        return dec[: self.pspace.dim]
-
-    # ------------------------------------------------------------------
-    def evaluate(self, params) -> float:
-        accs, n = [], 0
-        for batch in eval_batches(self.test_data, 256):
-            m = self.eval_fn(params, {k: jnp.asarray(v) for k, v in batch.items()})
-            accs.append(float(m["acc"]))
-            n += 1
-            if n >= self.cfg.max_eval_batches:
-                break
-        return float(np.mean(accs)) if accs else 0.0
-
-    # ------------------------------------------------------------------
     def run(self, progress: Optional[Callable[[dict], None]] = None) -> dict:
-        cfg = self.cfg
-        hist: dict[str, list] = {
-            "round": [], "acc": [], "co2_g": [], "cum_co2_g": [], "duration_s": [],
-            "reward": [], "loss": [], "eps_spent": [], "selected": [],
-        }
-        cum_co2 = 0.0
-        acc = self.evaluate(self.server_state.params)
-        last_acc = acc
-        for rnd in range(cfg.rounds):
-            self.key, k_sel, k_int, k_agg, k_noise = jax.random.split(self.key, 5)
-            t_hours = rnd * cfg.round_hours
-            inten = carbon_mod.intensity(self.fleet, t_hours, k_int)
+        return self._fed.run(progress=progress)
 
-            mask, self.orch_state = self.policy(
-                k_sel, self.orch_state, self.fleet, inten, cfg.clients_per_round
-            )
-            sel = np.flatnonzero(np.asarray(mask))[: cfg.clients_per_round]
-
-            # --- cohort local training: one vmapped jit call per round ------
-            batch_l = [
-                self.clients[ci].stacked_steps(cfg.batch_size, cfg.local_steps, rnd)
-                for ci in sel
-            ]
-            batches = {
-                k: jnp.asarray(np.stack([b[k] for b in batch_l])) for k in batch_l[0]
-            }
-            weights = [len(self.clients[ci]) for ci in sel]
-            if cfg.algorithm == "fedprox":
-                mus = client_mod.adaptive_mu(cfg.prox_mu, self.fleet.capability[jnp.asarray(sel)])
-            else:
-                mus = jnp.zeros(len(sel), jnp.float32)
-            if cfg.algorithm == "scaffold":
-                corrs = jax.tree.map(
-                    lambda c, *cis: jnp.stack([c - ci for ci in cis]),
-                    self.server_state.c, *[self.c_locals[ci] for ci in sel],
-                )
-            else:
-                corrs = jax.tree.map(
-                    lambda z: jnp.broadcast_to(z, (len(sel),) + z.shape), self.zero_corr
-                )
-            res = self.cohort_trainer(self.server_state.params, batches, mus, corrs)
-            losses = [float(l) for l in res.loss_last]
-
-            c_deltas = []
-            if cfg.algorithm == "scaffold":
-                # control-variate updates need per-client pytree deltas: fold
-                # the rows back through the single conversion site
-                for j, ci in enumerate(sel):
-                    delta_j = self.pspace.unravel(res.rows[j])
-                    new_ci = client_mod.scaffold_new_control(
-                        self.c_locals[ci], self.server_state.c, delta_j,
-                        res.n_steps[j], cfg.client_lr,
-                    )
-                    c_deltas.append(jax.tree.map(lambda a, b: a - b, new_ci, self.c_locals[ci]))
-                    self.c_locals[ci] = new_ci
-
-            if cfg.algorithm == "fednova":
-                deltas = [self.pspace.unravel(res.rows[j]) for j in range(len(sel))]
-                mean_delta = server_mod.fednova_mean_delta(deltas, weights, list(res.n_steps))
-            else:
-                mean_row = self._aggregate(res.rows, weights, k_agg)
-                mean_delta = self.pspace.unravel(mean_row)
-            self.server_state = self.server_apply(self.server_state, mean_delta)
-            if cfg.algorithm == "scaffold" and c_deltas:
-                self.server_state = server_mod.scaffold_update_c(
-                    self.server_state, c_deltas, cfg.n_clients
-                )
-
-            # ---- carbon + time accounting -------------------------------
-            sel_mask = jnp.zeros(cfg.n_clients, bool).at[jnp.asarray(sel)].set(True)
-            co2, _ = carbon_mod.round_emissions_g(self.fleet, sel_mask, t_hours, self.round_flops, None)
-            dur = carbon_mod.round_duration_s(self.fleet, sel_mask, self.round_flops, self.model_bytes)
-            co2, dur = float(co2), float(dur)
-            cum_co2 += co2
-
-            # ---- evaluation + MARL update --------------------------------
-            if (rnd + 1) % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
-                acc = self.evaluate(self.server_state.params)
-            eff = -dur / 100.0  # efficiency signal: faster rounds reward
-            if policy_uses_rl(cfg.selection):
-                # accuracy enters Eq. 4 as a fraction: with alpha=15 a typical
-                # +0.05 round gives +0.75 reward, commensurate with the CO2
-                # term (co2/1000 ~ 0.25) — percent scale makes early jumps
-                # (+75) lock the Q-table onto the first cohort selected.
-                self.orch_state, r = orch.update(
-                    self.orch_state, np.asarray(sel_mask), jnp.float32(acc),
-                    jnp.float32(eff), jnp.float32(co2), jnp.mean(inten),
-                )
-                r = float(r)
-            else:
-                r = 0.0
-            eps_spent = (
-                dp_mod.spent_epsilon(cfg.dp, rnd + 1) if cfg.dp is not None else 0.0
-            )
-            hist["round"].append(rnd)
-            hist["acc"].append(acc)
-            hist["co2_g"].append(co2)
-            hist["cum_co2_g"].append(cum_co2)
-            hist["duration_s"].append(dur)
-            hist["reward"].append(r)
-            hist["loss"].append(float(np.mean(losses)) if losses else 0.0)
-            hist["eps_spent"].append(eps_spent)
-            hist["selected"].append(sel.tolist())
-            last_acc = acc
-            if progress:
-                progress({k: hist[k][-1] for k in ("round", "acc", "co2_g", "loss")})
-        hist["final_acc"] = last_acc
-        hist["mean_co2_g"] = float(np.mean(hist["co2_g"]))
-        hist["mean_duration_s"] = float(np.mean(hist["duration_s"]))
-        hist["cum_co2_total_g"] = cum_co2
-        return hist
+    def __getattr__(self, name: str):
+        # legacy attribute surface: anything the old engine kept on `self`
+        # now lives on the strategy (buffer_k, regions, global_version, ...)
+        # or the runtime context (fleet, server_state, pspace, evaluate, ...)
+        if name.startswith("_"):
+            raise AttributeError(name)
+        fed = self.__dict__.get("_fed")
+        if fed is not None:
+            for owner in (fed.strategy, fed.ctx):
+                try:
+                    return getattr(owner, name)
+                except AttributeError:
+                    pass
+        raise AttributeError(f"{type(self).__name__!r} object has no attribute {name!r}")

@@ -68,3 +68,66 @@ def calibrate_sigma(target_eps: float, q: float, steps: int, delta: float,
 def paper_budget_sigma() -> float:
     """Sigma for the paper's stated run: (1.2, 1e-5)-DP, q=0.2, 100 rounds."""
     return calibrate_sigma(1.2, 0.2, 100, 1e-5)
+
+
+class SubsampledAccountant:
+    """Stateful RDP accountant for heterogeneous sampled-Gaussian steps.
+
+    The schedule-based :func:`eps_from_rdp` assumes every round runs the same
+    (q, sigma) — true for the flat synchronous protocol, false under the
+    async hierarchy, where each edge region flushes at its own cadence with
+    its own cohort-over-region sampling rate.  This accountant composes
+    whatever actually ran: the privacy pipeline's ``NoiseStage`` record
+    supplies the sigma of each aggregate call and the caller supplies the
+    realized subsampling rate; ``epsilon()`` composes the recorded steps on
+    the integer-alpha grid and converts to (eps, delta).
+
+    Homogeneous steps reduce exactly to ``eps_from_rdp(q, sigma, n, delta)``.
+    A step with sigma <= 0 (noise disabled) makes epsilon infinite, matching
+    ``dp.spent_epsilon``.  RDP vectors are cached per distinct (q, sigma), so
+    per-flush ``epsilon()`` polling stays cheap.
+    """
+
+    def __init__(self, delta: float):
+        self.delta = float(delta)
+        self._counts: dict[tuple[float, float], int] = {}
+        self._rdp_cache: dict[tuple[float, float], np.ndarray] = {}
+        self._unbounded = False
+
+    @property
+    def steps(self) -> int:
+        """Total composed aggregate calls."""
+        return sum(self._counts.values())
+
+    def record(self, q: float, sigma: float) -> None:
+        """Compose one sampled-Gaussian step at rate ``q`` and multiplier
+        ``sigma`` (call once per noised aggregate)."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"sampling rate q={q} must be in [0, 1]")
+        if sigma <= 0:
+            self._unbounded = True
+            return
+        key = (float(q), float(sigma))
+        self._counts[key] = self._counts.get(key, 0) + 1
+        if key not in self._rdp_cache:
+            self._rdp_cache[key] = np.asarray(
+                [rdp_sampled_gaussian(key[0], key[1], a) for a in ALPHA_GRID]
+            )
+
+    def epsilon(self) -> float:
+        """(eps, self.delta) guarantee of everything recorded so far."""
+        if self._unbounded:
+            return math.inf
+        if not self._counts:
+            return 0.0
+        total = np.zeros(len(ALPHA_GRID))
+        for key, n in self._counts.items():
+            total += n * self._rdp_cache[key]
+        best = math.inf
+        for i, alpha in enumerate(ALPHA_GRID):
+            eps = (
+                total[i] + math.log1p(-1 / alpha)
+                - (math.log(self.delta) + math.log(alpha)) / (alpha - 1)
+            )
+            best = min(best, eps)
+        return float(best)

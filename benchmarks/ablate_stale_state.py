@@ -1,0 +1,113 @@
+"""Ablation: straggler EMA in the MARL *state* vs the score-penalty default.
+
+PR 2 added the observed-staleness EMA to the orchestrator; PR 3 exposed two
+ways the selector can consume it on the async strategy:
+
+    score penalty (default)   chronic stragglers are demoted at selection
+                              time via orchestrator.LAMBDA_STALE
+    stale_in_state=True       the EMA is discretized into the Q-table state
+                              (Eq. 2 extended with a fourth factor), letting
+                              the policy *condition* on congestion instead
+                              of being nudged by it
+
+This closes the ROADMAP's pending comparison sweep: both arms run the same
+event-driven async runs (heterogeneous latency, multiple regions — the
+regime that actually produces stragglers) across seeds, and the JSON output
+records accuracy, staleness, emissions and reward so the encoding choice is
+a diffable artifact rather than a guess.
+
+    PYTHONPATH=src python -m benchmarks.ablate_stale_state [--fast]
+        -> results/ablate_stale_state.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import build_experiment
+from repro import api
+
+DEFAULTS = dict(rounds=24, n_clients=12, per_round=4, local_steps=6, seeds=(0, 1, 2))
+FAST = dict(rounds=10, n_clients=8, per_round=3, local_steps=3, seeds=(0, 1))
+
+
+def run_arm(stale_in_state: bool, seed: int, knobs: dict) -> dict:
+    data, clients, params, loss_fn, eval_fn, rounds = build_experiment(
+        "mnist_synthetic", seed=seed, rounds=knobs["rounds"],
+        n_clients=knobs["n_clients"], fast=True,
+    )
+    cfg = api.ExperimentConfig(
+        training=api.TrainingConfig(
+            algorithm="fedavg", n_clients=knobs["n_clients"],
+            clients_per_round=knobs["per_round"], rounds=knobs["rounds"],
+            local_steps=knobs["local_steps"], batch_size=32, client_lr=0.08,
+            eval_every=max(2, knobs["rounds"] // 6), seed=seed,
+        ),
+        # heterogeneous-latency async hierarchy: the straggler regime
+        topology=api.TopologyConfig(
+            mode="async_hier", latency_spread=1.0, n_regions=2,
+            buffer_k=max(2, knobs["per_round"] // 2),
+            concurrency=2 * knobs["per_round"], edge_sync_every=2,
+        ),
+        orchestrator=api.OrchestratorConfig(
+            selection="rl_green", stale_in_state=stale_in_state,
+        ),
+    )
+    task = api.FederatedTask(loss_fn, eval_fn, params, clients, data["test"])
+    t0 = time.time()
+    h = api.Federation(cfg, task).run()
+    half = len(h["reward"]) // 2
+    return {
+        "stale_in_state": stale_in_state,
+        "seed": seed,
+        "final_acc": h["final_acc"],
+        "mean_staleness": h["mean_staleness"],
+        "late_mean_staleness": float(np.mean(h["staleness"][half:])),
+        "mean_co2_g": h["mean_co2_g"],
+        "cum_co2_total_g": h["cum_co2_total_g"],
+        "late_mean_reward": float(np.mean(h["reward"][half:])),
+        "mean_duration_s": h["mean_duration_s"],
+        "wall_s": time.time() - t0,
+    }
+
+
+def summarize(rows: list[dict]) -> dict:
+    out = {}
+    for arm in (False, True):
+        sub = [r for r in rows if r["stale_in_state"] == arm]
+        out["stale_in_state" if arm else "score_penalty"] = {
+            k: float(np.mean([r[k] for r in sub]))
+            for k in ("final_acc", "mean_staleness", "late_mean_staleness",
+                      "cum_co2_total_g", "late_mean_reward")
+        }
+    return out
+
+
+def main(fast: bool = False, out: str = "results/ablate_stale_state.json") -> dict:
+    knobs = FAST if fast else DEFAULTS
+    rows = [
+        run_arm(arm, seed, knobs)
+        for arm in (False, True)
+        for seed in knobs["seeds"]
+    ]
+    summary = summarize(rows)
+    payload = {"protocol": {k: v for k, v in knobs.items() if k != "seeds"},
+               "seeds": list(knobs["seeds"]), "runs": rows, "summary": summary}
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(json.dumps(summary, indent=1))
+    print(f"wrote {len(rows)} runs -> {out}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="2 seeds, short runs")
+    ap.add_argument("--out", default="results/ablate_stale_state.json")
+    args = ap.parse_args()
+    main(fast=args.fast, out=args.out)

@@ -29,6 +29,7 @@ from benchmarks.common import csv_line
 from repro.fl.paramspace import ParamSpace
 from repro.kernels import ops, ref
 from repro.privacy import quantize, secure_agg
+from repro.topo import graph as topo_graph
 
 RECORDS: list[dict] = []
 
@@ -154,6 +155,31 @@ def bench_staleness_agg(k=16, P=262144):
     ]
 
 
+def bench_gossip_mix(k=16, P=262144, graph="torus"):
+    """Decentralized-strategy hot path: one X <- W X mixing pass over the
+    cohort's (k, P) node-model rows (Metropolis weights on ``graph``)."""
+    pspace = _row_space(P, seed=k)
+    rows_x = pspace.pad_rows(_stacked_rows(pspace, k, seed=2))
+    W = jnp.asarray(topo_graph.plan(graph, k, seed=0).mixing)
+    out = ops.gossip_mix(rows_x, W)
+    expect = ref.gossip_mix_ref(rows_x, W)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))  # bitwise
+    us_k = _time(lambda: ops.gossip_mix(rows_x, W))
+    us_r = _time(lambda: ref.gossip_mix_ref(rows_x, W))
+    Pp = pspace.padded_dim
+    bytes_moved = 2 * k * Pp * 4 + k * k * 4  # X read + written, W rides in VMEM
+    _record("gossip_mix", (k, Pp), us_k, bytes_moved, kernel=True)
+    _record("gossip_mix", (k, Pp), us_r, bytes_moved, kernel=False)
+    gap = topo_graph.spectral_gap(np.asarray(W))
+    return [
+        csv_line(
+            f"gossip_mix_pallas_{graph}_k{k}_P{Pp}", us_k,
+            f"bytes={bytes_moved};spectral_gap={gap:.3f};bitwise_vs_ref=1",
+        ),
+        csv_line(f"gossip_mix_xla_ref_{graph}_k{k}_P{Pp}", us_r, "matmul_reference=1"),
+    ]
+
+
 def main(out_json: str | None = "BENCH_kernels.json"):
     RECORDS.clear()
     rows = []
@@ -163,6 +189,8 @@ def main(out_json: str | None = "BENCH_kernels.json"):
     rows += bench_masked_agg(n=16, P=262144)
     rows += bench_staleness_agg(k=8, P=65536)
     rows += bench_staleness_agg(k=16, P=262144)
+    rows += bench_gossip_mix(k=8, P=65536, graph="ring")
+    rows += bench_gossip_mix(k=16, P=262144, graph="torus")
     for r in rows:
         print(r)
     if out_json:

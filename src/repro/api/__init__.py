@@ -15,12 +15,21 @@ Quick tour::
 
 Components (all swappable at the ``Federation`` call site):
 
-    strategy    ``STRATEGIES`` registry: "sync" | "async_hier", or any object
-                implementing the ``Strategy`` protocol
+    strategy    ``STRATEGIES`` registry: "sync" | "async_hier" | "gossip",
+                or any object implementing the ``Strategy`` protocol
     selector    ``repro.core.selection.POLICIES`` key, or a callable
     privacy     a ``PrivacyPipeline`` of row-native stages
                 (``ClipStage → QuantizeStage → MaskStage → NoiseStage``)
-    telemetry   sinks consuming the typed ``RoundEvent``/``FlushEvent`` stream
+    telemetry   sinks consuming the typed ``RoundEvent``/``FlushEvent``/
+                ``MixEvent`` stream
+
+Third-party aggregation topologies plug in without touching this package:
+implement the three-method ``Strategy`` protocol (``validate``/``setup``/
+``run``) against the shared ``RuntimeContext`` and call
+``register_strategy("myname", MyStrategy)`` — from then on
+``TopologyConfig(mode="myname")`` (and the JSON-grid ``build`` path)
+constructs it like a built-in.  ``strategy_names()`` lists what is
+registered; the built-in ``gossip`` strategy is itself registered this way.
 
 ``build(cfg_or_dict, task)`` is the registry constructor for JSON grids.
 The legacy ``FLConfig``/``Simulation`` entry points survive as deprecation
@@ -35,20 +44,22 @@ from repro.api.pipeline import (AggregationContext, ClipStage, MaskStage,
                                 ScaleStage, StageRecord, build_pipeline)
 from repro.api.runtime import FederatedTask, RuntimeContext
 from repro.api.telemetry import (CallbackSink, ConsoleSink, FlushEvent,
-                                 HistoryRecorder, RoundEvent, TelemetrySink)
+                                 HistoryRecorder, MixEvent, RoundEvent,
+                                 TelemetrySink)
 
 # strategy classes are re-exported for subclass-free composition, but the
 # registry itself stays lazy inside federation.py (import-cycle hygiene)
 from repro.api.async_hier import AsyncHierStrategy  # noqa: E402  isort: skip
+from repro.api.gossip import GossipStrategy  # noqa: E402  isort: skip
 from repro.api.sync import SyncStrategy  # noqa: E402  isort: skip
 
 __all__ = [
     "AggregationContext", "AsyncHierStrategy", "build", "build_pipeline",
     "CallbackSink", "CarbonConfig", "ClipStage", "ConsoleSink",
     "ExperimentConfig", "Federation", "FederatedTask", "FlushEvent",
-    "HistoryRecorder", "MaskStage", "NoiseStage", "OrchestratorConfig",
-    "PrivacyConfig", "PrivacyPipeline", "QuantizeStage", "register_strategy",
-    "RoundEvent", "RuntimeContext", "ScaleStage", "StageRecord", "STRATEGIES",
-    "Strategy", "strategy_names", "SyncStrategy", "TelemetrySink",
-    "TopologyConfig", "TrainingConfig",
+    "GossipStrategy", "HistoryRecorder", "MaskStage", "MixEvent",
+    "NoiseStage", "OrchestratorConfig", "PrivacyConfig", "PrivacyPipeline",
+    "QuantizeStage", "register_strategy", "RoundEvent", "RuntimeContext",
+    "ScaleStage", "StageRecord", "STRATEGIES", "Strategy", "strategy_names",
+    "SyncStrategy", "TelemetrySink", "TopologyConfig", "TrainingConfig",
 ]

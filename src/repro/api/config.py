@@ -70,17 +70,22 @@ class PrivacyConfig:
 
 @dataclasses.dataclass
 class TopologyConfig:
-    """Aggregation topology: flat synchronous rounds or the buffered
-    asynchronous edge→global hierarchy.  The async knobs are ignored by the
-    sync strategy."""
+    """Aggregation topology: flat synchronous rounds, the buffered
+    asynchronous edge→global hierarchy, or decentralized gossip.  Each
+    strategy reads only its own knob group (async_* vs gossip_*)."""
 
-    mode: str = "sync"            # sync | async_hier (Strategy registry key)
+    mode: str = "sync"            # sync | async_hier | gossip (Strategy registry key)
     buffer_k: int = 0             # flush when K deltas buffered (0 -> clients_per_round)
     staleness_cap: int = 10       # clamp tau inside the 1/sqrt(1+tau) weight
     latency_spread: float = 1.0   # 0 = wave completes together (sync equivalence)
     concurrency: int = 0          # in-flight clients per region (0 -> clients_per_round)
     n_regions: int = 1            # edge aggregators (phase-coherent client clusters)
     edge_sync_every: int = 1      # edge->global sync period, in edge flushes
+    # --- gossip (repro.topo): decentralized neighbor mixing ---------------
+    graph: str = "ring"           # ring | torus | erdos | one_peer | full (GRAPHS key)
+    mixing_steps: int = 1         # X <- W X passes per round
+    gossip_p: float = 0.4         # Erdos-Renyi edge probability (graph="erdos")
+    carbon_beta: float = 0.0      # >0 tilts mixing toward low-intensity peers
 
 
 @dataclasses.dataclass

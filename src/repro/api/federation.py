@@ -20,6 +20,8 @@ registered in :data:`STRATEGIES`:
     sync        lock-step rounds (``repro.api.sync.SyncStrategy``)
     async_hier  event-driven buffered aggregation under an edge→global
                 hierarchy (``repro.api.async_hier.AsyncHierStrategy``)
+    gossip      decentralized peer-to-peer mixing over graph topologies —
+                no server at all (``repro.api.gossip.GossipStrategy``)
 
 Strategies *compose* a shared :class:`~repro.api.runtime.RuntimeContext`
 (dataflow, fleet, privacy pipeline, server optimizer) instead of inheriting
@@ -71,10 +73,12 @@ def _ensure_registry() -> dict[str, Callable[[], Strategy]]:
     global _builtins_loaded
     if not _builtins_loaded:
         from repro.api.async_hier import AsyncHierStrategy
+        from repro.api.gossip import GossipStrategy
         from repro.api.sync import SyncStrategy
 
         STRATEGIES.setdefault("sync", SyncStrategy)
         STRATEGIES.setdefault("async_hier", AsyncHierStrategy)
+        STRATEGIES.setdefault("gossip", GossipStrategy)
         _builtins_loaded = True
     return STRATEGIES
 
@@ -118,7 +122,9 @@ class Federation:
             registry = _ensure_registry()
             if strategy not in registry:
                 raise ValueError(
-                    f"unknown strategy {strategy!r}; registered: {sorted(registry)}"
+                    f"unknown strategy {strategy!r}; registered strategies: "
+                    f"{', '.join(sorted(strategy_names()))}. Third-party "
+                    "topologies join via repro.api.register_strategy(name, factory)."
                 )
             strategy = registry[strategy]()
         self.strategy: Strategy = strategy

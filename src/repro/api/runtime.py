@@ -84,7 +84,10 @@ class RuntimeContext:
             local_opt = opt_mod.momentum(train.client_lr, beta=train.client_momentum)
         # the canonical pytree<->rows mapping every downstream layer shares
         self.pspace = ParamSpace.build(task.params0)
+        self.loss_fn = task.loss_fn
+        self.local_opt = local_opt
         self.trainer = client_mod.make_local_trainer(task.loss_fn, local_opt)
+        self._row_trainer = None  # built lazily by train_cohort_rows
         if train.sharded:
             from repro.launch import cohort as cohort_mod  # lazy: touches devices
 
@@ -131,15 +134,11 @@ class RuntimeContext:
         return 6.0 * self.pspace.dim * self.train.batch_size * self.train.local_steps
 
     # ------------------------------------------------------------------
-    def train_cohort(self, params, sel, step: int, corrections=None):
-        """Stack the selected clients' batches and run one vmapped
-        local-training dispatch against ``params``.
-
-        The single cohort-dispatch site both strategies share: per-client
-        step batches, FedProx adaptive mu, and the correction broadcast
-        (zero unless the caller passes SCAFFOLD control variates).  ``step``
-        seeds the clients' batch schedule (round index / dispatch wave).
-        """
+    def _cohort_inputs(self, sel, step: int, corrections=None):
+        """Shared cohort-dispatch plumbing: stacked per-client step batches,
+        FedProx adaptive mu, and the correction broadcast (zero unless the
+        caller passes SCAFFOLD control variates).  ``step`` seeds the
+        clients' batch schedule (round index / dispatch wave)."""
         train = self.train
         batch_l = [
             self.clients[ci].stacked_steps(train.batch_size, train.local_steps, step)
@@ -158,7 +157,27 @@ class RuntimeContext:
             corrections = jax.tree.map(
                 lambda z: jnp.broadcast_to(z, (len(sel),) + z.shape), self.zero_corr
             )
+        return batches, mus, corrections
+
+    def train_cohort(self, params, sel, step: int, corrections=None):
+        """One vmapped local-training dispatch of the selected cohort
+        against the shared ``params`` (the sync/async server model)."""
+        batches, mus, corrections = self._cohort_inputs(sel, step, corrections)
         return self.cohort_trainer(params, batches, mus, corrections)
+
+    def train_cohort_rows(self, param_rows, sel, step: int):
+        """Decentralized cohort dispatch: each selected node trains from its
+        OWN model, handed in as (k, P) ParamSpace rows — the gossip
+        strategy's node states.  Same batch schedule and FedProx rules as
+        :meth:`train_cohort`; SCAFFOLD corrections are undefined without a
+        server and therefore not accepted here.
+        """
+        if self._row_trainer is None:
+            self._row_trainer = client_mod.make_gossip_cohort_trainer(
+                self.loss_fn, self.local_opt, self.pspace
+            )
+        batches, mus, corrections = self._cohort_inputs(sel, step)
+        return self._row_trainer(param_rows, batches, mus, corrections)
 
     # ------------------------------------------------------------------
     def aggregate(
@@ -196,6 +215,43 @@ class RuntimeContext:
             return jnp.einsum("kp,k->p", rows, w)
         out = kernel_ops.staleness_aggregate(self.pspace.pad_rows(rows), w)
         return out[: self.pspace.dim]
+
+    # ------------------------------------------------------------------
+    def round_accounting(self, sel, t_hours: float):
+        """Participation mask + emissions + wall-time of one cohort round —
+        the §III-D accounting every lock-step strategy reports identically.
+
+        Returns ``(sel_mask, co2_g, duration_s)``.
+        """
+        sel_mask = jnp.zeros(self.train.n_clients, bool).at[jnp.asarray(sel)].set(True)
+        co2, _ = carbon_mod.round_emissions_g(
+            self.fleet, sel_mask, t_hours, self.round_flops, None
+        )
+        dur = carbon_mod.round_duration_s(
+            self.fleet, sel_mask, self.round_flops, self.model_bytes
+        )
+        return sel_mask, float(co2), float(dur)
+
+    def policy_update(self, sel_mask, acc: float, dur: float, co2: float, inten) -> float:
+        """One MARL reward update of the fleet-level orchestrator state
+        (no-op returning 0.0 for non-RL selectors).
+
+        Reward calibration: accuracy enters Eq. 4 as a fraction — with
+        alpha=15 a typical +0.05 round gives +0.75 reward, commensurate with
+        the CO2 term (co2/1000 ~ 0.25); percent scale would make early jumps
+        (+75) lock the Q-table onto the first cohort selected.  The
+        efficiency signal is ``-dur/100`` (faster rounds reward).  Strategies
+        with per-region orchestrator instances (async) keep their own update
+        site; this helper is the single fleet-level one, so the reward terms
+        cannot drift between the strategies that share it.
+        """
+        if not self.uses_rl:
+            return 0.0
+        self.orch_state, r = orch.update(
+            self.orch_state, np.asarray(sel_mask), jnp.float32(acc),
+            jnp.float32(-dur / 100.0), jnp.float32(co2), jnp.mean(inten),
+        )
+        return float(r)
 
     # ------------------------------------------------------------------
     def evaluate(self, params) -> float:

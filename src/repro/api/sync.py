@@ -20,7 +20,6 @@ from repro.api.config import ExperimentConfig
 from repro.api.runtime import RuntimeContext
 from repro.api.telemetry import SYNC_HISTORY_KEYS, RoundEvent
 from repro.core import carbon as carbon_mod
-from repro.core import orchestrator as orch
 from repro.fl import client as client_mod
 from repro.fl import server as server_mod
 from repro.privacy import dp as dp_mod
@@ -126,28 +125,13 @@ class SyncStrategy:
                 )
 
             # ---- carbon + time accounting -------------------------------
-            sel_mask = jnp.zeros(train.n_clients, bool).at[jnp.asarray(sel)].set(True)
-            co2, _ = carbon_mod.round_emissions_g(ctx.fleet, sel_mask, t_hours, ctx.round_flops, None)
-            dur = carbon_mod.round_duration_s(ctx.fleet, sel_mask, ctx.round_flops, ctx.model_bytes)
-            co2, dur = float(co2), float(dur)
+            sel_mask, co2, dur = ctx.round_accounting(sel, t_hours)
             cum_co2 += co2
 
             # ---- evaluation + MARL update --------------------------------
             if (rnd + 1) % train.eval_every == 0 or rnd == train.rounds - 1:
                 acc = ctx.evaluate(ctx.server_state.params)
-            eff = -dur / 100.0  # efficiency signal: faster rounds reward
-            if ctx.uses_rl:
-                # accuracy enters Eq. 4 as a fraction: with alpha=15 a typical
-                # +0.05 round gives +0.75 reward, commensurate with the CO2
-                # term (co2/1000 ~ 0.25) — percent scale makes early jumps
-                # (+75) lock the Q-table onto the first cohort selected.
-                ctx.orch_state, r = orch.update(
-                    ctx.orch_state, np.asarray(sel_mask), jnp.float32(acc),
-                    jnp.float32(eff), jnp.float32(co2), jnp.mean(inten),
-                )
-                r = float(r)
-            else:
-                r = 0.0
+            r = ctx.policy_update(sel_mask, acc, dur, co2, inten)
             eps_spent = self._spent_epsilon(ctx, rnd + 1)
             co2_l.append(co2)
             dur_l.append(dur)

@@ -3,8 +3,8 @@
 The legacy engines reported progress through an ad-hoc ``progress(dict)``
 callback and returned a history dict assembled inline in the round loop.
 Strategies now *emit* typed events — one :class:`RoundEvent` per synchronous
-round, one :class:`FlushEvent` per async buffer flush — and consumers
-subscribe as sinks:
+round, one :class:`FlushEvent` per async buffer flush, one :class:`MixEvent`
+per decentralized gossip round — and consumers subscribe as sinks:
 
     HistoryRecorder   rebuilds the legacy history-dict schema (the engine's
                       return value is produced by this sink, so the schema is
@@ -61,6 +61,29 @@ class FlushEvent(RoundEvent):
         return row
 
 
+@dataclasses.dataclass(frozen=True)
+class MixEvent(RoundEvent):
+    """One decentralized gossip round: local training + neighbor mixing.
+
+    ``consensus`` is the fleet-wide disagreement (mean L2 distance of node
+    models to their average) *after* this round's mixing passes;
+    ``spectral_gap`` is 1 - SLEM of the mixing matrix actually applied
+    (carbon reweighting included); ``mix_bytes`` counts the network bytes
+    the round's mixing moved (2 directed row transfers per graph edge per
+    step)."""
+
+    consensus: float = 0.0
+    spectral_gap: float = 0.0
+    mix_steps: int = 0       # mixing passes applied this round
+    mix_bytes: float = 0.0   # total bytes over all passes
+
+    def history_row(self) -> dict:
+        row = super().history_row()
+        row.update(consensus=self.consensus, spectral_gap=self.spectral_gap,
+                   mix_steps=self.mix_steps, mix_bytes=self.mix_bytes)
+        return row
+
+
 @runtime_checkable
 class TelemetrySink(Protocol):
     """Anything that consumes the event stream."""
@@ -73,6 +96,9 @@ SYNC_HISTORY_KEYS = (
     "reward", "loss", "eps_spent", "selected",
 )
 ASYNC_HISTORY_KEYS = SYNC_HISTORY_KEYS + ("staleness", "region", "sim_time_s")
+GOSSIP_HISTORY_KEYS = SYNC_HISTORY_KEYS + (
+    "consensus", "spectral_gap", "mix_steps", "mix_bytes",
+)
 
 
 class HistoryRecorder:

@@ -112,6 +112,32 @@ def make_cohort_trainer(loss_fn: Callable, opt: Optimizer, pspace: ParamSpace) -
     return run
 
 
+def make_gossip_cohort_trainer(loss_fn: Callable, opt: Optimizer, pspace: ParamSpace) -> Callable:
+    """Cohort trainer for decentralized strategies: per-node start params.
+
+    Identical contract to :func:`make_cohort_trainer` except the cohort does
+    NOT share one global model — each node trains from its own model, handed
+    in as a ``(k, P)`` ParamSpace rows matrix (the representation the gossip
+    mixing passes operate on).  The rows are folded back to pytrees inside
+    the vmapped trace, so per-node param pytrees never exist outside jit.
+
+    When every row is identical this reduces to :func:`make_cohort_trainer`
+    on that model — the training half of the gossip↔FedAvg equivalence
+    anchor.
+    """
+    single = make_local_trainer(loss_fn, opt)
+
+    @jax.jit
+    def run(param_rows, batches, mus, corrections) -> CohortResult:
+        res = jax.vmap(lambda r, b, m, c: single(pspace.unravel(r), b, m, c))(
+            param_rows, batches, mus, corrections
+        )
+        return CohortResult(pspace.stack(res.delta), res.n_steps,
+                            res.loss_first, res.loss_last)
+
+    return run
+
+
 def zero_correction(params: PyTree) -> PyTree:
     return tree_zeros_like(params, jnp.float32)
 

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
+from repro.kernels import gossip_mix as gm
 from repro.kernels import masked_agg as ma
 from repro.kernels import staleness_agg as sa
 from repro.utils import round_up
@@ -93,3 +94,16 @@ def staleness_aggregate(deltas, weights, *, block_p: int = 2048,
     return sa.staleness_aggregate(
         deltas, weights, block_p=block_p, interpret=_resolve(interpret)
     )
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def gossip_mix(rows, mixing, *, block_p: int = 2048,
+               interpret: Optional[bool] = None):
+    """Fused gossip mixing step (see gossip_mix.py).
+
+    rows: (k, P) float32 ParamSpace rows, mixing: (k, k) float32 ->
+    (k, P) W @ rows.  The gossip strategy pre-pads rows to whole blocks
+    (``ParamSpace.pad_rows``) so the kernel's defensive pad is a no-op on
+    the hot path; arbitrary P still works for direct callers.
+    """
+    return gm.gossip_mix(rows, mixing, block_p=block_p, interpret=_resolve(interpret))

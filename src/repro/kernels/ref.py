@@ -44,6 +44,18 @@ def staleness_aggregate_ref(deltas, weights):
     )
 
 
+def gossip_mix_ref(rows, mixing):
+    """Reference gossip mixing step.
+
+    rows: (k, P) float32 node-model rows, mixing: (k, k) float32
+    row-stochastic matrix.  Returns float32 (k, P):  W @ X
+    """
+    return jnp.dot(
+        mixing.astype(jnp.float32), rows.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
 def masked_aggregate_ref(masked, masks, clip: float, bits: int):
     """Reference fused unmask+dequantize.
 

@@ -1,0 +1,17 @@
+"""``repro.topo`` — communication topologies for decentralized aggregation.
+
+Graph construction + Metropolis–Hastings mixing matrices + spectral
+diagnostics (``repro.topo.graph``) and the row-native gossip mixing pass
+with carbon-aware reweighting (``repro.topo.gossip``).  The ``"gossip"``
+strategy in ``repro.api`` is built on this package.
+"""
+from repro.topo.graph import (GRAPHS, MixingPlan, consensus_rounds,
+                              is_connected, metropolis_weights, plan, slem,
+                              spectral_gap)
+from repro.topo.gossip import carbon_reweight, consensus_distance, mix_rows
+
+__all__ = [
+    "carbon_reweight", "consensus_distance", "consensus_rounds", "GRAPHS",
+    "is_connected", "metropolis_weights", "mix_rows", "MixingPlan", "plan",
+    "slem", "spectral_gap",
+]

@@ -9,6 +9,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.fl.paramspace import ParamSpace
 from repro.privacy import quantize, secure_agg
+from repro.topo import graph as topo_graph
 from repro.utils import clip_by_global_norm, tree_ravel, tree_unravel
 
 SET = dict(max_examples=25, deadline=None)
@@ -154,6 +155,52 @@ def test_tree_ravel_roundtrip(seed):
     back = tree_unravel(td, flat)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# -- mixing-matrix invariants (repro.topo) ----------------------------------
+
+
+@given(
+    st.sampled_from(sorted(topo_graph.GRAPHS)),
+    st.integers(min_value=1, max_value=24),        # nodes
+    st.integers(min_value=0, max_value=50),        # round (time-varying graphs)
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed (erdos)
+    st.floats(min_value=0.05, max_value=1.0),      # edge probability (erdos)
+)
+@settings(**SET)
+def test_metropolis_mixing_matrix_invariants(name, n, rnd, seed, p):
+    """Every registered topology yields symmetric, doubly-stochastic,
+    nonnegative Metropolis weights, and contracts (SLEM < 1) whenever the
+    round's graph is connected."""
+    plan = topo_graph.plan(name, n, rnd, seed=seed, p=p)
+    W = np.asarray(plan.mixing, np.float64)
+    assert W.shape == (n, n)
+    np.testing.assert_allclose(W, W.T, atol=1e-7)           # symmetric
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6)  # rows sum to 1
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-6)  # cols sum to 1
+    assert (W >= -1e-9).all()                                # nonnegative
+    if n > 1 and topo_graph.is_connected(plan.adjacency):
+        assert plan.slem < 1.0 - 1e-9
+        assert 0.0 < plan.spectral_gap <= 1.0 + 1e-9
+        assert plan.consensus_rounds() < float("inf")
+
+
+@given(
+    st.integers(min_value=2, max_value=16),
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(**SET)
+def test_mixing_preserves_average_for_any_connected_graph(n, seed):
+    """x <- Wx keeps the fleet mean invariant (doubly-stochastic contract)
+    and never expands disagreement."""
+    rng = np.random.default_rng(seed)
+    name = ("ring", "torus", "full", "one_peer")[seed % 4]
+    W = np.asarray(topo_graph.plan(name, n, rnd=seed % 7).mixing, np.float64)
+    x = rng.normal(0, 1, (n, 32))
+    mixed = W @ x
+    np.testing.assert_allclose(mixed.mean(axis=0), x.mean(axis=0), atol=1e-9)
+    dev = lambda y: np.linalg.norm(y - y.mean(axis=0, keepdims=True))
+    assert dev(mixed) <= dev(x) * (1.0 + 1e-9)
 
 
 @given(

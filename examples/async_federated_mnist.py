@@ -20,7 +20,7 @@ import argparse
 
 import jax
 
-from repro import api
+from repro import api, obs
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
 from repro.data.synthetic import DATASETS, get_dataset_spec, make_image_dataset
@@ -56,6 +56,8 @@ def main():
     ap.add_argument("--per-region-accounting", action="store_true",
                     help="one subsampled-RDP accountant per edge region")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="write repro.obs run artifacts (trace/events/manifest) here")
     args = ap.parse_args()
 
     spec = get_dataset_spec(args.dataset)
@@ -100,8 +102,17 @@ def main():
         eval_fn=lambda p, b: resnet_loss(p, rcfg, b)[1],
         params0=params, clients=clients, test_data=data["test"],
     )
-    fed = api.Federation(cfg, task, telemetry=[api.ConsoleSink()])
+    arts = obs.RunArtifacts(args.trace) if args.trace else None
+    sinks = [api.ConsoleSink(), *(arts.sinks if arts else [])]
+    fed = api.Federation(cfg, task, telemetry=sinks,
+                         tracer=arts.tracer if arts else None)
+    if arts:
+        arts.metrics.model_bytes = fed.ctx.model_bytes  # price edge traffic
     hist = fed.run()
+    if arts:
+        arts.finalize(cfg=cfg, strategy=fed.strategy.name,
+                      summary={"final_acc": hist["final_acc"],
+                               "mean_staleness": hist["mean_staleness"]})
     print(f"\n=== {args.variant} (async, {args.regions} region(s), "
           f"K={fed.strategy.buffer_k}) ===")
     print(f"final accuracy     : {100*hist['final_acc']:.2f}%")

@@ -22,7 +22,7 @@ import argparse
 
 import jax
 
-from repro import api
+from repro import api, obs
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
 from repro.data.synthetic import DATASETS, get_dataset_spec, make_image_dataset
@@ -50,6 +50,8 @@ def main():
     ap.add_argument("--selection", default="rl_green",
                     choices=["random", "green", "rl", "rl_green"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="write repro.obs run artifacts (trace/events/manifest) here")
     args = ap.parse_args()
 
     spec = get_dataset_spec(args.dataset)
@@ -85,8 +87,16 @@ def main():
           f"spectral_gap={pl.spectral_gap:.3f} "
           f"consensus_rounds(1e-3)={pl.consensus_rounds():.0f}")
 
-    fed = api.Federation(cfg, task, telemetry=[api.ConsoleSink()])
+    arts = obs.RunArtifacts(args.trace) if args.trace else None
+    sinks = [api.ConsoleSink(), *(arts.sinks if arts else [])]
+    fed = api.Federation(cfg, task, telemetry=sinks,
+                         tracer=arts.tracer if arts else None)
     hist = fed.run()
+    if arts:
+        arts.finalize(cfg=cfg, strategy=fed.strategy.name,
+                      summary={"final_acc": hist["final_acc"],
+                               "final_consensus": hist["final_consensus"],
+                               "mix_bytes_total": hist["mix_bytes_total"]})
     print(f"\n=== gossip ({args.graph}, {args.mixing_steps} mixing step(s)"
           f"{', carbon-weighted' if args.carbon_weighted else ''}) ===")
     print(f"final accuracy (avg model): {100*hist['final_acc']:.2f}%")
@@ -96,6 +106,9 @@ def main():
     print(f"mean spectral gap         : {hist['mean_spectral_gap']:.3f}")
     print(f"gossip traffic            : {hist['mix_bytes_total']/1e6:.1f} MB "
           f"({args.mixing_steps} step(s)/round)")
+    if arts:
+        print(f"run artifacts             : {args.trace} "
+              f"(report: python -m repro.obs.report {args.trace})")
 
 
 if __name__ == "__main__":

@@ -6,12 +6,17 @@ aggregation -> server update -> emissions accounting, with a typed
 telemetry sink printing per-round lines.
 
     PYTHONPATH=src python examples/quickstart.py [--rounds N]
+
+``--trace out/`` additionally records the run's observability artifacts
+(``repro.obs``): a Perfetto-loadable Chrome trace, the span + event JSONL
+streams, the metrics snapshot, and a self-describing run manifest —
+summarize them with ``python -m repro.obs.report out/``.
 """
 import argparse
 
 import jax
 
-from repro import api
+from repro import api, obs
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
 from repro.data.synthetic import MNIST_LIKE, make_image_dataset
@@ -21,6 +26,8 @@ from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="write repro.obs run artifacts (trace/events/manifest) here")
     args = ap.parse_args()
 
     data = make_image_dataset(MNIST_LIKE, n_train=2000, n_test=400)
@@ -48,12 +55,23 @@ def main():
         clients=clients,
         test_data=data["test"],
     )
-    fed = api.Federation(cfg, task, telemetry=[api.ConsoleSink()])
+    arts = obs.RunArtifacts(args.trace) if args.trace else None
+    sinks = [api.ConsoleSink(), *(arts.sinks if arts else [])]
+    fed = api.Federation(cfg, task, telemetry=sinks,
+                         tracer=arts.tracer if arts else None)
+    if arts:
+        arts.metrics.model_bytes = fed.ctx.model_bytes  # price server traffic
     hist = fed.run()
     print(f"\nprivacy pipeline    : {' -> '.join(fed.ctx.pipeline.describe()) or 'plain'}")
     print(f"final accuracy      : {hist['final_acc']:.3f}")
     print(f"mean CO2 per round  : {hist['mean_co2_g']:.0f} g")
     print(f"cumulative CO2      : {hist['cum_co2_total_g']:.0f} g")
+    if arts:
+        arts.finalize(cfg=cfg, strategy=fed.strategy.name,
+                      summary={"final_acc": hist["final_acc"],
+                               "cum_co2_total_g": hist["cum_co2_total_g"]})
+        print(f"run artifacts       : {args.trace} "
+              f"(report: python -m repro.obs.report {args.trace})")
 
 
 if __name__ == "__main__":

@@ -122,11 +122,14 @@ class AsyncHierStrategy:
         reg.key, k_sel, k_int, k_agg, k_noise = jax.random.split(reg.key, 5)
         t_hours = reg.waves * ctx.carbon.round_hours
         inten = carbon_mod.intensity(reg.fleet, t_hours, k_int)
-        mask, reg.orch_state = reg.policy(k_sel, reg.orch_state, reg.fleet, inten, k)
-        sel_local = np.flatnonzero(np.asarray(mask))[:k]
-        sel_global = reg.global_ids(sel_local)
+        with ctx.tracer.span("select", region=reg.idx, wave=reg.waves):
+            mask, reg.orch_state = reg.policy(k_sel, reg.orch_state, reg.fleet, inten, k)
+            sel_local = np.flatnonzero(np.asarray(mask))[:k]
+            sel_global = reg.global_ids(sel_local)
 
-        res = ctx.train_cohort(reg.edge_params, sel_global, reg.waves)
+        with ctx.tracer.span("train", region=reg.idx, wave=reg.waves,
+                             cohort=len(sel_global)):
+            res = ctx.train_cohort(reg.edge_params, sel_global, reg.waves)
 
         durs = self.client_durs[np.asarray(sel_global)]
         mean_d = float(np.mean(durs))
@@ -168,11 +171,13 @@ class AsyncHierStrategy:
         """
         if reg.pending == 0:
             return
-        tau_g = self.global_version - reg.synced_version
-        w_g = float(hierarchy.staleness_weight(tau_g, ctx.topology.staleness_cap))
-        scale = w_g * reg.n / ctx.train.n_clients
-        row = reg.edge_accum if scale == 1.0 else reg.edge_accum * scale
-        ctx.server_state = ctx.server_apply(ctx.server_state, ctx.pspace.unravel(row))
+        with ctx.tracer.span("edge_sync", region=reg.idx,
+                             bytes=ctx.model_bytes):
+            tau_g = self.global_version - reg.synced_version
+            w_g = float(hierarchy.staleness_weight(tau_g, ctx.topology.staleness_cap))
+            scale = w_g * reg.n / ctx.train.n_clients
+            row = reg.edge_accum if scale == 1.0 else reg.edge_accum * scale
+            ctx.server_state = ctx.server_apply(ctx.server_state, ctx.pspace.unravel(row))
         self.global_version += 1
         reg.synced_version = self.global_version
         reg.edge_params = ctx.server_state.params
@@ -215,7 +220,8 @@ class AsyncHierStrategy:
         n_prior = reg.wave_flushes.get(trigger.wave, 0)
         reg.wave_flushes[trigger.wave] = n_prior + 1
         k_flush = trigger.k_agg if n_prior == 0 else jax.random.fold_in(trigger.k_agg, n_prior)
-        mean_row, records = ctx.aggregate(rows, eff_w, k_flush)
+        with ctx.tracer.span("aggregate", region=reg.idx, cohort=len(entries)):
+            mean_row, records = ctx.aggregate(rows, eff_w, k_flush)
         reg.edge_params = ctx.pspace.add_to_tree(reg.edge_params, mean_row)
         reg.edge_accum = reg.edge_accum + mean_row
         reg.version += 1
@@ -282,7 +288,9 @@ class AsyncHierStrategy:
             reg.inflight -= 1
             reg.buffer.append(entry)
             while len(reg.buffer) >= self.buffer_k and flushes < train.rounds:
-                entries, taus, co2, dur, flush_mask = self._flush(ctx, reg, entry)
+                with ctx.tracer.span("flush", region=ridx, flush=flushes) as fsp:
+                    entries, taus, co2, dur, flush_mask = self._flush(ctx, reg, entry)
+                    fsp.set(co2_g=co2, bytes=2 * len(entries) * ctx.model_bytes)
                 # straggler EMA: observed staleness per flushed client feeds
                 # the MARL state so selection can demote chronic stragglers
                 # (zero in the sync-equivalence regime -> no behavior change).

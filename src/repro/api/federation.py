@@ -100,8 +100,10 @@ class Federation:
     ``cfg.topology.mode``, selector from ``cfg.orchestrator.selection``,
     pipeline from ``cfg.privacy``); pass instances to override — a custom
     ``Strategy`` object, a selector callable, a hand-composed
-    :class:`PrivacyPipeline`, extra telemetry sinks.  Validation and all
-    subsystem wiring happen at construction, so bad configs fail fast.
+    :class:`PrivacyPipeline`, extra telemetry sinks, a span ``tracer``
+    (``repro.obs.Tracer``; the no-op default makes instrumentation free).
+    Validation and all subsystem wiring happen at construction, so bad
+    configs fail fast.
     """
 
     def __init__(
@@ -113,6 +115,7 @@ class Federation:
         selector: Union[None, str, Callable] = None,
         privacy: Optional[PrivacyPipeline] = None,
         telemetry: Iterable[TelemetrySink] = (),
+        tracer=None,
     ):
         self.cfg = cfg
         self.task = task
@@ -129,7 +132,8 @@ class Federation:
             strategy = registry[strategy]()
         self.strategy: Strategy = strategy
         self.strategy.validate(cfg)
-        self.ctx = RuntimeContext(cfg, task, pipeline=privacy, selector=selector)
+        self.ctx = RuntimeContext(cfg, task, pipeline=privacy, selector=selector,
+                                  tracer=tracer)
         self.strategy.setup(self.ctx)
         self.telemetry: list[TelemetrySink] = list(telemetry)
         self._ran = False
@@ -155,7 +159,8 @@ class Federation:
             for sink in sinks:
                 sink.emit(event)
 
-        summary = self.strategy.run(self.ctx, emit)
+        with self.ctx.tracer.span("run", strategy=self.strategy.name):
+            summary = self.strategy.run(self.ctx, emit)
         history = recorder.history
         history.update(summary)
         return history

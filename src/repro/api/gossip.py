@@ -122,60 +122,67 @@ class GossipStrategy:
         acc = ctx.evaluate(self.mean_model(ctx))
         last_acc = acc
         consensus = 0.0
+        tracer = ctx.tracer
         for rnd in range(train.rounds):
-            # same 5-way split as the sync strategy: k_agg/k_noise are unused
-            # (no server aggregation) but keeping the schedule makes the
-            # selection stream bitwise comparable across strategies
-            self.key, k_sel, k_int, k_agg, k_noise = jax.random.split(self.key, 5)
-            t_hours = rnd * cfg.carbon.round_hours
-            inten = carbon_mod.intensity(ctx.fleet, t_hours, k_int)
+            with tracer.span("round", round=rnd, strategy=self.name) as round_sp:
+                # same 5-way split as the sync strategy: k_agg/k_noise are unused
+                # (no server aggregation) but keeping the schedule makes the
+                # selection stream bitwise comparable across strategies
+                self.key, k_sel, k_int, k_agg, k_noise = jax.random.split(self.key, 5)
+                t_hours = rnd * cfg.carbon.round_hours
+                inten = carbon_mod.intensity(ctx.fleet, t_hours, k_int)
 
-            mask, ctx.orch_state = ctx.policy(
-                k_sel, ctx.orch_state, ctx.fleet, inten, train.clients_per_round
-            )
-            sel = np.flatnonzero(np.asarray(mask))[: train.clients_per_round]
-            sel_ix = jnp.asarray(sel)
-            k = len(sel)
+                with tracer.span("select", round=rnd):
+                    mask, ctx.orch_state = ctx.policy(
+                        k_sel, ctx.orch_state, ctx.fleet, inten, train.clients_per_round
+                    )
+                    sel = np.flatnonzero(np.asarray(mask))[: train.clients_per_round]
+                sel_ix = jnp.asarray(sel)
+                k = len(sel)
 
-            # --- local training: each node from its own model row ----------
-            res = ctx.train_cohort_rows(self.node_rows[sel_ix], sel, rnd)
-            losses = [float(l) for l in res.loss_last]
-            rows = self.node_rows[sel_ix] + res.rows
+                # --- local training: each node from its own model row ----------
+                with tracer.span("train", round=rnd, cohort=k):
+                    res = ctx.train_cohort_rows(self.node_rows[sel_ix], sel, rnd)
+                    losses = [float(l) for l in res.loss_last]
+                    rows = self.node_rows[sel_ix] + res.rows
 
-            # --- neighbor mixing over the round's cohort graph -------------
-            plan = graph_mod.plan(topo.graph, k, rnd, seed=train.seed, p=topo.gossip_p)
-            W = plan.mixing
-            if topo.carbon_beta > 0.0:
-                W = gossip_mod.carbon_reweight(
-                    W, np.asarray(inten)[sel], topo.carbon_beta
-                )
-            for _ in range(topo.mixing_steps):
-                rows = gossip_mod.mix_rows(ctx.pspace, rows, W)
-            self.node_rows = self.node_rows.at[sel_ix].set(rows)
-            mix_bytes = float(topo.mixing_steps * plan.bytes_per_step(ctx.pspace.nbytes))
-            mix_bytes_total += mix_bytes
-            gap = graph_mod.spectral_gap(W)  # of the matrix actually applied
+                # --- neighbor mixing over the round's cohort graph -------------
+                plan = graph_mod.plan(topo.graph, k, rnd, seed=train.seed, p=topo.gossip_p)
+                W = plan.mixing
+                if topo.carbon_beta > 0.0:
+                    W = gossip_mod.carbon_reweight(
+                        W, np.asarray(inten)[sel], topo.carbon_beta
+                    )
+                mix_bytes = float(topo.mixing_steps * plan.bytes_per_step(ctx.pspace.nbytes))
+                with tracer.span("mix", round=rnd, steps=topo.mixing_steps,
+                                 graph=topo.graph, bytes=mix_bytes):
+                    for _ in range(topo.mixing_steps):
+                        rows = gossip_mod.mix_rows(ctx.pspace, rows, W)
+                    self.node_rows = self.node_rows.at[sel_ix].set(rows)
+                mix_bytes_total += mix_bytes
+                gap = graph_mod.spectral_gap(W)  # of the matrix actually applied
 
-            # ---- carbon + time accounting (training cost = sync's) --------
-            sel_mask, co2, dur = ctx.round_accounting(sel, t_hours)
-            cum_co2 += co2
+                # ---- carbon + time accounting (training cost = sync's) --------
+                sel_mask, co2, dur = ctx.round_accounting(sel, t_hours)
+                cum_co2 += co2
 
-            # ---- evaluation (average model) + MARL update ------------------
-            if (rnd + 1) % train.eval_every == 0 or rnd == train.rounds - 1:
-                acc = ctx.evaluate(self.mean_model(ctx))
-            consensus = gossip_mod.consensus_distance(self.node_rows)
-            r = ctx.policy_update(sel_mask, acc, dur, co2, inten)
-            co2_l.append(co2)
-            dur_l.append(dur)
-            gap_l.append(gap)
-            last_acc = acc
-            emit(MixEvent(
-                round=rnd, acc=acc, loss=float(np.mean(losses)) if losses else 0.0,
-                co2_g=co2, cum_co2_g=cum_co2, duration_s=dur, reward=r,
-                eps_spent=0.0, selected=tuple(int(c) for c in sel),
-                consensus=consensus, spectral_gap=gap,
-                mix_steps=topo.mixing_steps, mix_bytes=mix_bytes,
-            ))
+                # ---- evaluation (average model) + MARL update ------------------
+                if (rnd + 1) % train.eval_every == 0 or rnd == train.rounds - 1:
+                    acc = ctx.evaluate(self.mean_model(ctx))
+                consensus = gossip_mod.consensus_distance(self.node_rows)
+                r = ctx.policy_update(sel_mask, acc, dur, co2, inten)
+                co2_l.append(co2)
+                dur_l.append(dur)
+                gap_l.append(gap)
+                last_acc = acc
+                round_sp.set(co2_g=co2, bytes=mix_bytes)
+                emit(MixEvent(
+                    round=rnd, acc=acc, loss=float(np.mean(losses)) if losses else 0.0,
+                    co2_g=co2, cum_co2_g=cum_co2, duration_s=dur, reward=r,
+                    eps_spent=0.0, selected=tuple(int(c) for c in sel),
+                    consensus=consensus, spectral_gap=gap,
+                    mix_steps=topo.mixing_steps, mix_bytes=mix_bytes,
+                ))
         return {
             "final_acc": last_acc,
             "mean_co2_g": float(np.mean(co2_l)) if co2_l else 0.0,

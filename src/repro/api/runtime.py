@@ -38,6 +38,7 @@ from repro.fl import client as client_mod
 from repro.fl import server as server_mod
 from repro.fl.paramspace import ParamSpace
 from repro.kernels import ops as kernel_ops
+from repro.obs.trace import NULL_TRACER
 from repro.optim import optimizers as opt_mod
 from repro.utils import PyTree, tree_zeros_like
 
@@ -63,10 +64,14 @@ class RuntimeContext:
         *,
         pipeline: Optional[PrivacyPipeline] = None,
         selector: Union[None, str, Callable] = None,
+        tracer=None,
     ):
         train, priv = cfg.training, cfg.privacy
         assert len(task.clients) == train.n_clients
         self.cfg = cfg
+        # span tracer every strategy wraps its phases with; the shared no-op
+        # singleton by default, so untraced hot paths cost nothing
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.train = train
         self.privacy = priv
         self.topology = cfg.topology
@@ -255,14 +260,15 @@ class RuntimeContext:
 
     # ------------------------------------------------------------------
     def evaluate(self, params) -> float:
-        accs, n = [], 0
-        for batch in eval_batches(self.test_data, 256):
-            m = self.eval_fn(params, {k: jnp.asarray(v) for k, v in batch.items()})
-            accs.append(float(m["acc"]))
-            n += 1
-            if n >= self.train.max_eval_batches:
-                break
-        return float(np.mean(accs)) if accs else 0.0
+        with self.tracer.span("eval"):
+            accs, n = [], 0
+            for batch in eval_batches(self.test_data, 256):
+                m = self.eval_fn(params, {k: jnp.asarray(v) for k, v in batch.items()})
+                accs.append(float(m["acc"]))
+                n += 1
+                if n >= self.train.max_eval_batches:
+                    break
+            return float(np.mean(accs)) if accs else 0.0
 
 
 def _resolve_selector(selector, cfg: ExperimentConfig) -> tuple[Callable, bool]:

@@ -76,71 +76,79 @@ class SyncStrategy:
         cum_co2 = 0.0
         acc = ctx.evaluate(ctx.server_state.params)
         last_acc = acc
+        tracer = ctx.tracer
         for rnd in range(train.rounds):
-            self.key, k_sel, k_int, k_agg, k_noise = jax.random.split(self.key, 5)
-            t_hours = rnd * cfg.carbon.round_hours
-            inten = carbon_mod.intensity(ctx.fleet, t_hours, k_int)
+            with tracer.span("round", round=rnd, strategy=self.name) as round_sp:
+                self.key, k_sel, k_int, k_agg, k_noise = jax.random.split(self.key, 5)
+                t_hours = rnd * cfg.carbon.round_hours
+                inten = carbon_mod.intensity(ctx.fleet, t_hours, k_int)
 
-            mask, ctx.orch_state = ctx.policy(
-                k_sel, ctx.orch_state, ctx.fleet, inten, train.clients_per_round
-            )
-            sel = np.flatnonzero(np.asarray(mask))[: train.clients_per_round]
-
-            # --- cohort local training: one vmapped jit call per round ------
-            weights = [len(ctx.clients[ci]) for ci in sel]
-            if train.algorithm == "scaffold":
-                corrs = jax.tree.map(
-                    lambda c, *cis: jnp.stack([c - ci for ci in cis]),
-                    ctx.server_state.c, *[ctx.c_locals[ci] for ci in sel],
-                )
-            else:
-                corrs = None  # train_cohort broadcasts the zero correction
-            res = ctx.train_cohort(ctx.server_state.params, sel, rnd, corrections=corrs)
-            losses = [float(l) for l in res.loss_last]
-
-            c_deltas = []
-            if train.algorithm == "scaffold":
-                # control-variate updates need per-client pytree deltas: fold
-                # the rows back through the single conversion site
-                for j, ci in enumerate(sel):
-                    delta_j = ctx.pspace.unravel(res.rows[j])
-                    new_ci = client_mod.scaffold_new_control(
-                        ctx.c_locals[ci], ctx.server_state.c, delta_j,
-                        res.n_steps[j], train.client_lr,
+                with tracer.span("select", round=rnd):
+                    mask, ctx.orch_state = ctx.policy(
+                        k_sel, ctx.orch_state, ctx.fleet, inten, train.clients_per_round
                     )
-                    c_deltas.append(jax.tree.map(lambda a, b: a - b, new_ci, ctx.c_locals[ci]))
-                    ctx.c_locals[ci] = new_ci
+                    sel = np.flatnonzero(np.asarray(mask))[: train.clients_per_round]
 
-            if train.algorithm == "fednova":
-                deltas = [ctx.pspace.unravel(res.rows[j]) for j in range(len(sel))]
-                mean_delta = server_mod.fednova_mean_delta(deltas, weights, list(res.n_steps))
-            else:
-                mean_row, records = ctx.aggregate(res.rows, weights, k_agg)
-                mean_delta = ctx.pspace.unravel(mean_row)
-                self._record_privacy(ctx, records, len(sel))
-            ctx.server_state = ctx.server_apply(ctx.server_state, mean_delta)
-            if train.algorithm == "scaffold" and c_deltas:
-                ctx.server_state = server_mod.scaffold_update_c(
-                    ctx.server_state, c_deltas, train.n_clients
-                )
+                # --- cohort local training: one vmapped jit call per round ------
+                weights = [len(ctx.clients[ci]) for ci in sel]
+                if train.algorithm == "scaffold":
+                    corrs = jax.tree.map(
+                        lambda c, *cis: jnp.stack([c - ci for ci in cis]),
+                        ctx.server_state.c, *[ctx.c_locals[ci] for ci in sel],
+                    )
+                else:
+                    corrs = None  # train_cohort broadcasts the zero correction
+                with tracer.span("train", round=rnd, cohort=len(sel)):
+                    res = ctx.train_cohort(
+                        ctx.server_state.params, sel, rnd, corrections=corrs
+                    )
+                    losses = [float(l) for l in res.loss_last]
 
-            # ---- carbon + time accounting -------------------------------
-            sel_mask, co2, dur = ctx.round_accounting(sel, t_hours)
-            cum_co2 += co2
+                c_deltas = []
+                if train.algorithm == "scaffold":
+                    # control-variate updates need per-client pytree deltas: fold
+                    # the rows back through the single conversion site
+                    for j, ci in enumerate(sel):
+                        delta_j = ctx.pspace.unravel(res.rows[j])
+                        new_ci = client_mod.scaffold_new_control(
+                            ctx.c_locals[ci], ctx.server_state.c, delta_j,
+                            res.n_steps[j], train.client_lr,
+                        )
+                        c_deltas.append(jax.tree.map(lambda a, b: a - b, new_ci, ctx.c_locals[ci]))
+                        ctx.c_locals[ci] = new_ci
 
-            # ---- evaluation + MARL update --------------------------------
-            if (rnd + 1) % train.eval_every == 0 or rnd == train.rounds - 1:
-                acc = ctx.evaluate(ctx.server_state.params)
-            r = ctx.policy_update(sel_mask, acc, dur, co2, inten)
-            eps_spent = self._spent_epsilon(ctx, rnd + 1)
-            co2_l.append(co2)
-            dur_l.append(dur)
-            last_acc = acc
-            emit(RoundEvent(
-                round=rnd, acc=acc, loss=float(np.mean(losses)) if losses else 0.0,
-                co2_g=co2, cum_co2_g=cum_co2, duration_s=dur, reward=r,
-                eps_spent=eps_spent, selected=tuple(int(c) for c in sel),
-            ))
+                with tracer.span("aggregate", round=rnd, cohort=len(sel)):
+                    if train.algorithm == "fednova":
+                        deltas = [ctx.pspace.unravel(res.rows[j]) for j in range(len(sel))]
+                        mean_delta = server_mod.fednova_mean_delta(deltas, weights, list(res.n_steps))
+                    else:
+                        mean_row, records = ctx.aggregate(res.rows, weights, k_agg)
+                        mean_delta = ctx.pspace.unravel(mean_row)
+                        self._record_privacy(ctx, records, len(sel))
+                    ctx.server_state = ctx.server_apply(ctx.server_state, mean_delta)
+                    if train.algorithm == "scaffold" and c_deltas:
+                        ctx.server_state = server_mod.scaffold_update_c(
+                            ctx.server_state, c_deltas, train.n_clients
+                        )
+
+                # ---- carbon + time accounting -------------------------------
+                sel_mask, co2, dur = ctx.round_accounting(sel, t_hours)
+                cum_co2 += co2
+
+                # ---- evaluation + MARL update --------------------------------
+                if (rnd + 1) % train.eval_every == 0 or rnd == train.rounds - 1:
+                    acc = ctx.evaluate(ctx.server_state.params)
+                r = ctx.policy_update(sel_mask, acc, dur, co2, inten)
+                eps_spent = self._spent_epsilon(ctx, rnd + 1)
+                co2_l.append(co2)
+                dur_l.append(dur)
+                last_acc = acc
+                round_sp.set(co2_g=co2, bytes=2 * len(sel) * ctx.model_bytes)
+                emit(RoundEvent(
+                    round=rnd, acc=acc, loss=float(np.mean(losses)) if losses else 0.0,
+                    co2_g=co2, cum_co2_g=cum_co2, duration_s=dur, reward=r,
+                    eps_spent=eps_spent, selected=tuple(int(c) for c in sel),
+                ))
         return {
             "final_acc": last_acc,
             "mean_co2_g": float(np.mean(co2_l)) if co2_l else 0.0,

@@ -106,6 +106,14 @@ class HistoryRecorder:
 
     ``keys`` fixes the schema up front (so a zero-event run still returns
     every column, exactly as the old engines did).
+
+    Contract for heterogeneous streams: every column in ``keys`` gets
+    exactly one entry per event; a column the event's ``history_row`` does
+    not carry (e.g. ``consensus`` when a plain :class:`RoundEvent` reaches
+    a gossip-keyed recorder, or any strategy-specific key when sinks are
+    shared across strategies) is filled with ``None`` rather than raising.
+    Columns the event carries *beyond* the schema are dropped — the schema
+    is fixed by the recorder, not widened by the stream.
     """
 
     def __init__(self, keys: Iterable[str] = SYNC_HISTORY_KEYS):
@@ -114,7 +122,7 @@ class HistoryRecorder:
     def emit(self, event: RoundEvent) -> None:
         row = event.history_row()
         for k in self.history:
-            self.history[k].append(row[k])
+            self.history[k].append(row.get(k))
 
 
 class ConsoleSink:
@@ -129,10 +137,18 @@ class ConsoleSink:
         self._n += 1
         if (self._n - 1) % self.every:
             return
-        tag = "flush" if isinstance(event, FlushEvent) else "round"
+        # dispatch on the concrete type, most-derived first: MixEvent is a
+        # RoundEvent sibling-of-FlushEvent in semantics but a subclass in
+        # code, and each type gets its one signature field on the line
+        if isinstance(event, MixEvent):
+            tag, extra = "mix", f"  consensus={event.consensus:.4f}"
+        elif isinstance(event, FlushEvent):
+            tag, extra = "flush", f"  staleness={event.staleness:.2f}"
+        else:
+            tag, extra = "round", ""
         print(
             f"{tag} {event.round:3d}  acc={event.acc:.3f}  "
-            f"CO2={event.co2_g:.0f} g  loss={event.loss:.3f}",
+            f"CO2={event.co2_g:.0f} g  loss={event.loss:.3f}{extra}",
             file=self.stream, flush=True,
         )
 

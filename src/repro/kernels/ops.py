@@ -5,6 +5,10 @@ layout, GQA head mapping, head-dim padding to the 128-lane MXU width, and
 sequence padding to block multiples.  ``interpret`` defaults to None, which
 resolves per-backend: interpreter on CPU (this container), Mosaic lowering
 on TPU.  Pass an explicit bool to override.
+
+Every kernel dispatch runs under a ``jax.named_scope`` (``repro.kernels/*``)
+so the ops are attributable in ``jax.profiler`` traces — the device-side
+counterpart of the host-side ``repro.obs`` span tracer.
 """
 from __future__ import annotations
 
@@ -58,11 +62,12 @@ def flash_attention(
     kbh = prep(k, S, S_p, K)
     vbh = prep(v, S, S_p, K)
 
-    out = fa.flash_attention_bh(
-        qbh, kbh, vbh, causal=causal, window=window, logit_cap=logit_cap,
-        block_q=block_q, block_k=block_k, group=group, seq_k=S,
-        interpret=_resolve(interpret),
-    )
+    with jax.named_scope("repro.kernels/flash_attention"):
+        out = fa.flash_attention_bh(
+            qbh, kbh, vbh, causal=causal, window=window, logit_cap=logit_cap,
+            block_q=block_q, block_k=block_k, group=group, seq_k=S,
+            interpret=_resolve(interpret),
+        )
     out = out.reshape(B, H, T_p, hd_p).transpose(0, 2, 1, 3)
     return out[:, :T, :, :hd].astype(q.dtype)
 
@@ -77,9 +82,10 @@ def masked_aggregate(masked, masks, clip: float, bits: int, *, block_p: int = 20
     (``ParamSpace.pad_rows``), so the kernel's defensive pad is a no-op on
     the hot path; arbitrary P still works for direct callers.
     """
-    return ma.masked_aggregate(
-        masked, masks, clip, bits, block_p=block_p, interpret=_resolve(interpret)
-    )
+    with jax.named_scope("repro.kernels/masked_agg"):
+        return ma.masked_aggregate(
+            masked, masks, clip, bits, block_p=block_p, interpret=_resolve(interpret)
+        )
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
@@ -91,9 +97,10 @@ def staleness_aggregate(deltas, weights, *, block_p: int = 2048,
     Σ_i w_i·delta_i.  Like :func:`masked_aggregate`, the engines pre-pad
     rows to whole blocks so no reshaping or padding happens here.
     """
-    return sa.staleness_aggregate(
-        deltas, weights, block_p=block_p, interpret=_resolve(interpret)
-    )
+    with jax.named_scope("repro.kernels/staleness_agg"):
+        return sa.staleness_aggregate(
+            deltas, weights, block_p=block_p, interpret=_resolve(interpret)
+        )
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
@@ -106,4 +113,5 @@ def gossip_mix(rows, mixing, *, block_p: int = 2048,
     (``ParamSpace.pad_rows``) so the kernel's defensive pad is a no-op on
     the hot path; arbitrary P still works for direct callers.
     """
-    return gm.gossip_mix(rows, mixing, block_p=block_p, interpret=_resolve(interpret))
+    with jax.named_scope("repro.kernels/gossip_mix"):
+        return gm.gossip_mix(rows, mixing, block_p=block_p, interpret=_resolve(interpret))

@@ -97,7 +97,7 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
     cfg0 = dataclasses.replace(cfg0, scan_layers=False, remat=True)
     cfg = cfg_for_shape(cfg0, shape)
     setup = setup or default_setup(cfg)
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     from repro.distributed import specs as dspec
 
@@ -124,9 +124,9 @@ def run_pair(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
                 input_specs(cfg, shape)["token"],
                 serve_mod.abstract_decode_state(cfg, shape),
             )
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     cost = dict(compiled.cost_analysis() or {})
     mem = _mem_stats(compiled)

@@ -1,0 +1,97 @@
+"""``repro.obs`` — observability for federation runs.
+
+Four pieces, composable à la carte or bundled via :class:`RunArtifacts`:
+
+    trace.py    nestable span :class:`Tracer` on monotonic clocks (no-op
+                :class:`NullTracer` default), Chrome-trace/Perfetto export,
+                streaming span JSONL
+    metrics.py  :class:`MetricsRegistry` (Counter/Gauge/Histogram) and the
+                :class:`MetricsSink` that folds the typed event stream into
+                bytes/CO₂/eps/consensus aggregates
+    sinks.py    crash-safe :class:`JsonlSink` event log + :func:`read_events`
+                round-trip
+    runinfo.py  self-describing run manifests (:func:`write_manifest`)
+
+Quick tour — a fully observed run::
+
+    from repro import api, obs
+
+    arts = obs.RunArtifacts("out/run1")
+    fed = api.Federation(cfg, task, telemetry=arts.sinks, tracer=arts.tracer)
+    arts.metrics.model_bytes = fed.ctx.model_bytes   # price server traffic
+    hist = fed.run()
+    arts.finalize(cfg=cfg, strategy=fed.strategy.name,
+                  summary={"final_acc": hist["final_acc"]})
+
+leaves ``out/run1/`` holding ``trace.jsonl`` (span stream), ``trace.json``
+(Chrome trace — open in https://ui.perfetto.dev), ``events.jsonl`` (typed
+event log), ``metrics.json`` (aggregates) and ``run.json`` (manifest); then
+
+    python -m repro.obs.report out/run1
+
+prints the per-phase time/bytes/CO₂ breakdown.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               MetricsSink)
+from repro.obs.runinfo import (MANIFEST_SCHEMA, collect, config_hash,
+                               read_manifest, write_manifest)
+from repro.obs.sinks import EVENT_TYPES, JsonlSink, read_events
+from repro.obs.trace import (NULL_TRACER, NullTracer, SpanRecord, Tracer,
+                             read_spans)
+
+
+class RunArtifacts:
+    """One observed run's durable artifact bundle, rooted at ``out_dir``.
+
+    Construction opens the streaming writers (``trace.jsonl`` spans,
+    ``events.jsonl`` events — both crash-safe, flushed per line);
+    :meth:`finalize` writes the derived artifacts (Chrome trace, metrics
+    snapshot, run manifest) and closes the streams.  ``sinks`` plugs
+    straight into ``Federation(..., telemetry=arts.sinks)`` and ``tracer``
+    into ``Federation(..., tracer=arts.tracer)``.
+    """
+
+    TRACE_JSONL = "trace.jsonl"
+    TRACE_CHROME = "trace.json"
+    EVENTS_JSONL = "events.jsonl"
+    METRICS_JSON = "metrics.json"
+    MANIFEST_JSON = "run.json"
+
+    def __init__(self, out_dir: str, *, model_bytes: float = 0.0,
+                 fsync: bool = False):
+        self.out_dir = out_dir
+        os.makedirs(out_dir, exist_ok=True)
+        self.tracer = Tracer(jsonl_path=os.path.join(out_dir, self.TRACE_JSONL))
+        self.events = JsonlSink(os.path.join(out_dir, self.EVENTS_JSONL), fsync=fsync)
+        self.metrics = MetricsSink(model_bytes=model_bytes)
+
+    @property
+    def sinks(self) -> list:
+        return [self.events, self.metrics]
+
+    def finalize(self, *, cfg=None, strategy: Optional[str] = None,
+                 mesh_shape=None, summary: Optional[dict] = None) -> dict:
+        """Write trace.json / metrics.json / run.json; returns the manifest."""
+        self.tracer.export_chrome(os.path.join(self.out_dir, self.TRACE_CHROME))
+        self.tracer.close()
+        self.events.close()
+        self.metrics.to_json(os.path.join(self.out_dir, self.METRICS_JSON))
+        extra = {"summary": summary} if summary else None
+        return write_manifest(
+            os.path.join(self.out_dir, self.MANIFEST_JSON),
+            cfg=cfg, strategy=strategy, mesh_shape=mesh_shape, extra=extra,
+        )
+
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "MetricsSink",
+    "MANIFEST_SCHEMA", "collect", "config_hash", "read_manifest",
+    "write_manifest", "EVENT_TYPES", "JsonlSink", "read_events",
+    "NULL_TRACER", "NullTracer", "SpanRecord", "Tracer", "read_spans",
+    "RunArtifacts",
+]

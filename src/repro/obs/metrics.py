@@ -1,0 +1,183 @@
+"""Counter/Gauge/Histogram registry + the event-stream metrics sink.
+
+:class:`MetricsRegistry` is a tiny in-process metrics store (no external
+deps, no background threads): named counters (monotonic sums), gauges (last
+value wins), and histograms (raw observations; percentiles computed at
+snapshot time).  ``snapshot()`` returns a plain JSON-safe dict, so the
+registry doubles as a durable run artifact via :meth:`MetricsRegistry.to_json`.
+
+:class:`MetricsSink` implements the ``repro.api.telemetry.TelemetrySink``
+protocol and folds the typed event stream into aggregates the paper's
+claims are stated in:
+
+    bytes_moved         wire traffic: gossip mixing bytes (``MixEvent``)
+                        plus, when ``model_bytes`` is set, the 2·|cohort|
+                        model transfers of every server round/flush
+    co2_g_total         cumulative emissions (plus a per-region breakdown
+                        from ``FlushEvent.region``)
+    eps_spent           the privacy budget spent so far (gauge)
+    consensus           gossip disagreement histogram -> percentiles
+    staleness           async flush-staleness histogram
+    duration_s / loss / acc per-event distributions
+
+Dispatch is on the concrete event type — ``MixEvent`` and ``FlushEvent``
+both subclass ``RoundEvent``, so the most-derived check runs first.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from repro.api.telemetry import FlushEvent, MixEvent, RoundEvent
+
+
+class Counter:
+    """Monotonic sum."""
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += v
+
+    def snapshot(self) -> float:
+        return self.value
+
+
+class Gauge:
+    """Last value wins."""
+
+    def __init__(self) -> None:
+        self.value: Optional[float] = None
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def snapshot(self) -> Optional[float]:
+        return self.value
+
+
+class Histogram:
+    """Raw-observation histogram; quantiles interpolated at snapshot time.
+
+    Runs emit a few thousand events at most, so storing raw values is
+    cheaper and more faithful than fixed buckets.
+    """
+
+    def __init__(self) -> None:
+        self.values: list[float] = []
+
+    def observe(self, v: float) -> None:
+        self.values.append(float(v))
+
+    def percentile(self, q: float) -> float:
+        """Linear-interpolated quantile, q in [0, 100]."""
+        vs = sorted(self.values)
+        if not vs:
+            return float("nan")
+        if len(vs) == 1:
+            return vs[0]
+        pos = (q / 100.0) * (len(vs) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(vs) - 1)
+        frac = pos - lo
+        return vs[lo] * (1.0 - frac) + vs[hi] * frac
+
+    def snapshot(self) -> dict:
+        vs = self.values
+        if not vs:
+            return {"count": 0}
+        return {
+            "count": len(vs),
+            "min": min(vs),
+            "max": max(vs),
+            "mean": sum(vs) / len(vs),
+            "p50": self.percentile(50),
+            "p90": self.percentile(90),
+            "p99": self.percentile(99),
+        }
+
+
+class MetricsRegistry:
+    """Get-or-create store of named metrics; one namespace per run."""
+
+    def __init__(self) -> None:
+        self._metrics: dict[str, object] = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls()
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} already registered as {type(m).__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """JSON-safe view of every metric, keyed by name."""
+        return {name: m.snapshot() for name, m in sorted(self._metrics.items())}
+
+    def to_json(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=1, sort_keys=True)
+        return path
+
+
+class MetricsSink:
+    """Folds ``RoundEvent``/``FlushEvent``/``MixEvent`` streams into a registry.
+
+    ``model_bytes`` (settable after construction, e.g. from
+    ``Federation.ctx.model_bytes``) prices the server strategies' wire
+    traffic at 2 transfers (model down, delta up) per selected client per
+    event; gossip traffic comes from ``MixEvent.mix_bytes`` directly.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 model_bytes: float = 0.0):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.model_bytes = float(model_bytes)
+
+    def emit(self, event: RoundEvent) -> None:
+        reg = self.registry
+        reg.counter("events").inc()
+        reg.counter("co2_g_total").inc(event.co2_g)
+        reg.gauge("cum_co2_g").set(event.cum_co2_g)
+        reg.gauge("eps_spent").set(event.eps_spent)
+        reg.gauge("acc").set(event.acc)
+        reg.histogram("duration_s").observe(event.duration_s)
+        reg.histogram("loss").observe(event.loss)
+        if isinstance(event, MixEvent):
+            reg.counter("mixes").inc()
+            reg.counter("bytes_moved").inc(event.mix_bytes)
+            reg.counter("mix_steps").inc(event.mix_steps)
+            reg.histogram("consensus").observe(event.consensus)
+            reg.gauge("spectral_gap").set(event.spectral_gap)
+        elif isinstance(event, FlushEvent):
+            reg.counter("flushes").inc()
+            reg.counter(f"co2_g_total[region={event.region}]").inc(event.co2_g)
+            reg.histogram("staleness").observe(event.staleness)
+            reg.gauge("sim_time_s").set(event.sim_time_s)
+            if self.model_bytes:
+                reg.counter("bytes_moved").inc(2 * len(event.selected) * self.model_bytes)
+        else:
+            reg.counter("rounds").inc()
+            if self.model_bytes:
+                reg.counter("bytes_moved").inc(2 * len(event.selected) * self.model_bytes)
+
+    # convenience passthroughs so a sink can be finalized without reaching in
+    def snapshot(self) -> dict:
+        return self.registry.snapshot()
+
+    def to_json(self, path: str) -> str:
+        return self.registry.to_json(path)

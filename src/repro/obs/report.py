@@ -1,0 +1,202 @@
+"""``python -m repro.obs.report <run_dir | files...>`` — artifact summarizer.
+
+Reads the durable artifacts a traced run leaves behind — the span stream
+(``trace.jsonl``), the typed event log (``events.jsonl``), and the run
+manifest (``run.json``) — and prints where the run's wall-clock, bytes, and
+CO₂ actually went:
+
+  * per-phase span table: count, total/mean time, share of the traced
+    wall-clock (root spans), plus the CO₂ and bytes the instrumented spans
+    attached as attributes;
+  * event totals: rounds/flushes/mixes, final accuracy, cumulative CO₂
+    (with the per-region split for async runs), privacy budget spent, and
+    wire bytes moved.
+
+Arguments may be a run directory (the layout ``RunArtifacts`` writes) or
+any mix of span/event JSONL files — rows are classified by shape, so the
+CLI does not care which file is which.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Iterable, Optional
+
+from repro.obs.runinfo import MANIFEST_SCHEMA
+from repro.obs.sinks import read_events
+from repro.obs.trace import read_spans
+from repro.api.telemetry import FlushEvent, MixEvent
+
+
+def _classify(path: str) -> str:
+    """span | events | manifest | unknown, by content shape.
+
+    ``.json`` artifacts (manifest, Chrome trace, metrics) are whole-file
+    documents — possibly pretty-printed — while the ``.jsonl`` streams are
+    classified from their first row.
+    """
+    if path.endswith(".json"):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            return "unknown"
+        if isinstance(doc, dict) and doc.get("schema") == MANIFEST_SCHEMA:
+            return "manifest"
+        return "unknown"  # Chrome trace / metrics: re-renderings of the JSONL
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except json.JSONDecodeError:
+                return "unknown"
+            if isinstance(row, dict) and "event" in row:
+                return "events"
+            if isinstance(row, dict) and "dur_us" in row and "name" in row:
+                return "span"
+            return "unknown"
+    return "unknown"
+
+
+def gather(paths: Iterable[str]) -> dict:
+    """Resolve CLI arguments to {spans, events, manifest}."""
+    span_rows: list[dict] = []
+    events: list = []
+    manifest: Optional[dict] = None
+    files: list[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(
+                os.path.join(p, fn) for fn in sorted(os.listdir(p))
+                if fn.endswith((".json", ".jsonl"))
+            )
+        else:
+            files.append(p)
+    for fn in files:
+        kind = _classify(fn)
+        if kind == "span":
+            span_rows.extend(read_spans(fn))
+        elif kind == "events":
+            events.extend(read_events(fn))
+        elif kind == "manifest":
+            with open(fn) as f:
+                manifest = json.load(f)
+        # unknown files (e.g. the Chrome trace.json, metrics.json) are skipped:
+        # their content is a re-rendering of the JSONL streams
+    return {"spans": span_rows, "events": events, "manifest": manifest}
+
+
+# ---------------------------------------------------------------------------
+def summarize_spans(rows: list[dict]) -> list[dict]:
+    """Per-name aggregate over span rows, ordered by total time desc."""
+    agg: dict[str, dict] = {}
+    for r in rows:
+        a = agg.setdefault(r["name"], {
+            "phase": r["name"], "count": 0, "total_s": 0.0,
+            "co2_g": 0.0, "bytes": 0.0,
+        })
+        a["count"] += 1
+        a["total_s"] += r["dur_us"] / 1e6
+        attrs = r.get("attrs") or {}
+        a["co2_g"] += float(attrs.get("co2_g") or 0.0)
+        a["bytes"] += float(attrs.get("bytes") or 0.0)
+    out = sorted(agg.values(), key=lambda a: -a["total_s"])
+    wall = sum(r["dur_us"] / 1e6 for r in rows if r.get("depth", 0) == 0)
+    for a in out:
+        a["mean_ms"] = 1e3 * a["total_s"] / a["count"]
+        a["pct_wall"] = 100.0 * a["total_s"] / wall if wall > 0 else 0.0
+    return out
+
+
+def summarize_events(events: list) -> dict:
+    """Totals over the typed event stream (see telemetry event classes)."""
+    s = {
+        "events": len(events), "rounds": 0, "flushes": 0, "mixes": 0,
+        "co2_g_total": 0.0, "co2_by_region_g": {}, "bytes_moved": 0.0,
+        "final_acc": None, "eps_spent": 0.0, "final_consensus": None,
+    }
+    for e in events:
+        s["co2_g_total"] += e.co2_g
+        s["eps_spent"] = max(s["eps_spent"], e.eps_spent)
+        s["final_acc"] = e.acc
+        if isinstance(e, MixEvent):
+            s["mixes"] += 1
+            s["bytes_moved"] += e.mix_bytes
+            s["final_consensus"] = e.consensus
+        elif isinstance(e, FlushEvent):
+            s["flushes"] += 1
+            reg = s["co2_by_region_g"]
+            reg[e.region] = reg.get(e.region, 0.0) + e.co2_g
+        else:
+            s["rounds"] += 1
+    return s
+
+
+# ---------------------------------------------------------------------------
+def render(data: dict) -> str:
+    lines: list[str] = []
+    man = data.get("manifest")
+    if man:
+        lines.append(
+            "run: strategy={} backend={} jax={} config={}".format(
+                man.get("strategy", "?"), man.get("backend", "?"),
+                man.get("jax_version", "?"), man.get("config_hash", "?"),
+            )
+        )
+    spans = data["spans"]
+    if spans:
+        lines.append("")
+        lines.append("per-phase breakdown (spans):")
+        lines.append(
+            f"  {'phase':<14}{'count':>6}{'total_s':>10}{'mean_ms':>10}"
+            f"{'%wall':>8}{'CO2_g':>10}{'MB':>10}"
+        )
+        for a in summarize_spans(spans):
+            lines.append(
+                f"  {a['phase']:<14}{a['count']:>6}{a['total_s']:>10.3f}"
+                f"{a['mean_ms']:>10.1f}{a['pct_wall']:>8.1f}"
+                f"{a['co2_g']:>10.1f}{a['bytes'] / 1e6:>10.2f}"
+            )
+    ev = summarize_events(data["events"]) if data["events"] else None
+    if ev:
+        lines.append("")
+        lines.append(
+            "events: {events} total ({rounds} rounds, {flushes} flushes, "
+            "{mixes} mixes)".format(**ev)
+        )
+        lines.append(
+            f"  final acc={ev['final_acc']:.4f}  CO2={ev['co2_g_total']:.1f} g  "
+            f"eps={ev['eps_spent']:.3f}  wire={ev['bytes_moved'] / 1e6:.2f} MB"
+        )
+        if ev["co2_by_region_g"]:
+            per_reg = "  ".join(
+                f"region {r}: {g:.1f} g" for r, g in sorted(ev["co2_by_region_g"].items())
+            )
+            lines.append(f"  CO2 by region: {per_reg}")
+        if ev["final_consensus"] is not None:
+            lines.append(f"  final consensus distance: {ev['final_consensus']:.5f}")
+    if not spans and not data["events"]:
+        lines.append("no span or event rows found")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Summarize per-phase time/bytes/CO2 from run artifacts.",
+    )
+    ap.add_argument("paths", nargs="+",
+                    help="run directory (RunArtifacts layout) or JSONL files")
+    args = ap.parse_args(argv)
+    data = gather(args.paths)
+    print(render(data))
+    return 0 if (data["spans"] or data["events"]) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,98 @@
+"""Run manifests: every trace/event artifact ships with what produced it.
+
+A trace file found on disk three months later is useless unless it says
+which config, code, and backend produced it.  :func:`collect` gathers that
+provenance — a stable hash of the ``ExperimentConfig`` (and the config
+itself), the strategy name, jax/jaxlib versions, the active backend and
+device inventory, the mesh shape when one is given, python/platform — and
+:func:`write_manifest` drops it as ``run.json`` next to the other artifacts
+so every run directory is self-describing.
+
+The manifest is schema-versioned (``MANIFEST_SCHEMA``) so downstream
+tooling (``repro.obs.report``, figure scripts) can evolve the format
+without guessing.
+"""
+from __future__ import annotations
+
+import datetime
+import hashlib
+import json
+import os
+import platform
+import sys
+from typing import Any, Optional
+
+MANIFEST_SCHEMA = "metafed-run-manifest/v1"
+
+
+def config_hash(cfg) -> str:
+    """Stable short hash of an ``ExperimentConfig`` (or plain config dict).
+
+    Two runs with equal hashes ran the same experiment definition — the
+    key experiment grids and the report CLI group artifacts by.
+    """
+    d = cfg.to_dict() if hasattr(cfg, "to_dict") else dict(cfg)
+    blob = json.dumps(d, sort_keys=True, default=str).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def _backend_info() -> dict:
+    """jax runtime facts; degrades to partial info if jax is unavailable."""
+    info: dict[str, Any] = {}
+    try:
+        import jax
+
+        info["jax_version"] = jax.__version__
+        try:
+            import jaxlib
+
+            info["jaxlib_version"] = jaxlib.__version__
+        except Exception:
+            pass
+        info["backend"] = jax.default_backend()
+        devs = jax.devices()
+        info["device_count"] = len(devs)
+        info["device_kinds"] = sorted({d.device_kind for d in devs})
+    except Exception as e:  # pragma: no cover - jax is a hard dep in-repo
+        info["backend_error"] = repr(e)
+    return info
+
+
+def collect(*, cfg=None, strategy: Optional[str] = None, mesh_shape=None,
+            extra: Optional[dict] = None) -> dict:
+    """Assemble the manifest dict (pure; :func:`write_manifest` persists it)."""
+    man: dict[str, Any] = {
+        "schema": MANIFEST_SCHEMA,
+        "created_utc": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+    }
+    man.update(_backend_info())
+    if strategy is not None:
+        man["strategy"] = strategy
+    if mesh_shape is not None:
+        man["mesh_shape"] = dict(mesh_shape)
+    if cfg is not None:
+        man["config_hash"] = config_hash(cfg)
+        man["config"] = cfg.to_dict() if hasattr(cfg, "to_dict") else dict(cfg)
+    if extra:
+        man.update(extra)
+    return man
+
+
+def write_manifest(path: str, *, cfg=None, strategy: Optional[str] = None,
+                   mesh_shape=None, extra: Optional[dict] = None) -> dict:
+    """Write ``collect(...)`` to ``path``; returns the manifest dict."""
+    man = collect(cfg=cfg, strategy=strategy, mesh_shape=mesh_shape, extra=extra)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(man, f, indent=1, sort_keys=True, default=str)
+    return man
+
+
+def read_manifest(path: str) -> dict:
+    with open(path) as f:
+        man = json.load(f)
+    if man.get("schema") != MANIFEST_SCHEMA:
+        raise ValueError(f"{path}: unknown manifest schema {man.get('schema')!r}")
+    return man

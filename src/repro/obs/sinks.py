@@ -1,0 +1,91 @@
+"""Durable event-log sink: the typed telemetry stream as crash-safe JSONL.
+
+:class:`JsonlSink` implements the ``repro.api.telemetry.TelemetrySink``
+protocol — pass it via ``Federation(..., telemetry=[JsonlSink(path)])`` —
+and appends one JSON object per event, tagged with the concrete event type
+so the stream is heterogeneous-safe (sync rounds, async flushes, and gossip
+mixes can share one file).  Every line is flushed as it is written (and
+optionally fsync'd), so a crashed run keeps every completed event; at most
+the final partial line is lost, and :func:`read_events` tolerates exactly
+that truncation.
+
+:func:`read_events` is the inverse: it parses a JSONL log back into the
+typed event objects, which is what makes the sink a *round-trip* durable
+format rather than a write-only log (``tests/test_obs.py`` asserts
+events == read_events(emit(events)) for all three strategies).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional, TextIO
+
+from repro.api.telemetry import FlushEvent, MixEvent, RoundEvent
+
+#: concrete event types a log line may carry, keyed by their wire tag
+EVENT_TYPES: dict[str, type] = {
+    "RoundEvent": RoundEvent,
+    "FlushEvent": FlushEvent,
+    "MixEvent": MixEvent,
+}
+
+
+class JsonlSink:
+    """Streams the event stream to ``path``, one JSON line per event."""
+
+    def __init__(self, path: str, *, fsync: bool = False):
+        self.path = path
+        self.fsync = fsync
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        self._f: Optional[TextIO] = open(path, "w")
+
+    def emit(self, event: RoundEvent) -> None:
+        if self._f is None:
+            raise ValueError(f"JsonlSink({self.path!r}) is closed")
+        row = {"event": type(event).__name__, **dataclasses.asdict(event)}
+        row["selected"] = list(event.selected)
+        self._f.write(json.dumps(row) + "\n")
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    def __enter__(self) -> "JsonlSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_events(path: str) -> list[RoundEvent]:
+    """Parse a :class:`JsonlSink` log back into typed events.
+
+    Unknown event tags raise (the log is versioned by its tag set); a
+    truncated *final* line — the one partial write a crash can leave — is
+    dropped, any earlier corruption raises.
+    """
+    events: list[RoundEvent] = []
+    with open(path) as f:
+        lines = f.readlines()
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                break
+            raise
+        tag = row.pop("event", None)
+        cls = EVENT_TYPES.get(tag)
+        if cls is None:
+            raise ValueError(f"{path}:{i + 1}: unknown event type {tag!r}")
+        row["selected"] = tuple(row["selected"])
+        events.append(cls(**row))
+    return events

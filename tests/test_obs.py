@@ -1,0 +1,386 @@
+"""repro.obs: span tracer properties, Chrome-trace schema, JSONL sink
+round-trips across all three strategies, metrics folding, run manifests,
+the report CLI, and the NullTracer no-op (bitwise-history) guarantee."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api, obs
+from repro.api.telemetry import GOSSIP_HISTORY_KEYS
+from repro.data.partition import dirichlet_partition
+from repro.data.pipeline import build_clients
+from repro.data.synthetic import MNIST_LIKE, make_image_dataset
+from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
+from repro.obs import report as report_mod
+
+
+# ---------------------------------------------------------------------------
+# Tracer unit tests (deterministic injected clock)
+# ---------------------------------------------------------------------------
+
+
+def _ticking_clock(step=1.0):
+    t = [0.0]
+
+    def clock():
+        t[0] += step
+        return t[0]
+
+    return clock
+
+
+def test_span_nesting_and_ordering(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    tr = obs.Tracer(jsonl_path=path, clock=_ticking_clock())
+    with tr.span("outer", round=0):
+        with tr.span("inner_a"):
+            pass
+        with tr.span("inner_b"):
+            pass
+    with tr.span("second"):
+        pass
+    tr.close()
+
+    # spans record at exit: children before parents, siblings in order
+    assert [s.name for s in tr.spans] == ["inner_a", "inner_b", "outer", "second"]
+    assert [s.depth for s in tr.spans] == [1, 1, 0, 0]
+    by = {s.name: s for s in tr.spans}
+    # containment: children inside the parent interval
+    for child in ("inner_a", "inner_b"):
+        assert by[child].start_s >= by["outer"].start_s
+        assert by[child].start_s + by[child].dur_s <= by["outer"].start_s + by["outer"].dur_s
+    # sibling ordering on the monotonic clock
+    assert by["inner_a"].start_s + by["inner_a"].dur_s <= by["inner_b"].start_s
+    assert by["outer"].start_s + by["outer"].dur_s <= by["second"].start_s
+    assert by["outer"].attrs == {"round": 0}
+    assert all(s.dur_s >= 0 for s in tr.spans)
+
+    # streaming JSONL mirrors the in-memory records
+    rows = obs.read_spans(path)
+    assert [r["name"] for r in rows] == [s.name for s in tr.spans]
+    assert [r["depth"] for r in rows] == [s.depth for s in tr.spans]
+    np.testing.assert_allclose([r["ts_us"] for r in rows],
+                               [s.start_s * 1e6 for s in tr.spans])
+
+
+def test_mid_span_attrs_and_depth_recovery():
+    tr = obs.Tracer(clock=_ticking_clock())
+    with tr.span("round", round=3) as sp:
+        sp.set(co2_g=12.5, bytes=1000)
+    with tr.span("next"):
+        pass
+    assert tr.spans[0].attrs == {"round": 3, "co2_g": 12.5, "bytes": 1000}
+    assert tr.spans[1].depth == 0  # depth counter recovered after exit
+
+
+def _validate_chrome(path):
+    with open(path) as f:
+        trace = json.load(f)
+    assert isinstance(trace["traceEvents"], list) and trace["traceEvents"]
+    for ev in trace["traceEvents"]:
+        assert ev["ph"] == "X"
+        assert isinstance(ev["name"], str) and ev["name"]
+        assert isinstance(ev["ts"], (int, float)) and ev["ts"] >= 0
+        assert isinstance(ev["dur"], (int, float)) and ev["dur"] >= 0
+        assert isinstance(ev["pid"], int)
+        assert isinstance(ev["tid"], int)
+        assert isinstance(ev.get("args", {}), dict)
+    return trace
+
+
+def test_chrome_trace_schema(tmp_path):
+    tr = obs.Tracer(clock=_ticking_clock())
+    with tr.span("a", tag="x"):
+        with tr.span("b"):
+            pass
+    out = str(tmp_path / "trace.json")
+    tr.export_chrome(out)
+    trace = _validate_chrome(out)
+    assert {e["name"] for e in trace["traceEvents"]} == {"a", "b"}
+
+
+def test_null_tracer_is_free_and_shared():
+    cm1 = obs.NULL_TRACER.span("anything", round=1)
+    cm2 = obs.NULL_TRACER.span("else")
+    assert cm1 is cm2  # shared singleton context manager: no allocation
+    with cm1 as sp:
+        sp.set(co2_g=1.0)  # accepted and dropped
+    assert obs.NULL_TRACER.spans == []
+    assert obs.NULL_TRACER.chrome_trace()["traceEvents"] == []
+    assert not obs.NULL_TRACER.enabled
+
+
+def test_truncated_streams_tolerated(tmp_path):
+    sp = tmp_path / "trace.jsonl"
+    tr = obs.Tracer(jsonl_path=str(sp), clock=_ticking_clock())
+    with tr.span("a"):
+        pass
+    with tr.span("b"):
+        pass
+    tr.close()
+    with open(sp, "a") as f:
+        f.write('{"name": "partial", "ts_us": 1.0, "dur')  # crash mid-write
+    assert [r["name"] for r in obs.read_spans(str(sp))] == ["a", "b"]
+
+    ep = tmp_path / "events.jsonl"
+    sink = obs.JsonlSink(str(ep))
+    sink.emit(_round_event())
+    sink.close()
+    with open(ep, "a") as f:
+        f.write('{"event": "RoundEvent", "round": 9')
+    assert obs.read_events(str(ep)) == [_round_event()]
+    # corruption anywhere but the final line is a real error
+    with open(ep, "a") as f:
+        f.write('\n{"event": "RoundEvent"}\n')
+    with pytest.raises(json.JSONDecodeError):
+        obs.read_events(str(ep))
+
+
+# ---------------------------------------------------------------------------
+# Event sinks + metrics (hand-built events)
+# ---------------------------------------------------------------------------
+
+
+def _round_event(**kw):
+    base = dict(round=0, acc=0.5, loss=1.25, co2_g=10.0, cum_co2_g=10.0,
+                duration_s=3.0, reward=0.1, eps_spent=0.0, selected=(1, 2))
+    base.update(kw)
+    return api.RoundEvent(**base)
+
+
+def _flush_event(**kw):
+    base = dict(round=1, acc=0.6, loss=0.9, co2_g=11.0, cum_co2_g=21.0,
+                duration_s=3.5, reward=0.2, eps_spent=0.7, selected=(3,),
+                staleness=1.5, region=1, sim_time_s=42.0)
+    base.update(kw)
+    return api.FlushEvent(**base)
+
+
+def _mix_event(**kw):
+    base = dict(round=2, acc=0.7, loss=0.8, co2_g=9.0, cum_co2_g=30.0,
+                duration_s=2.5, reward=0.0, eps_spent=0.0, selected=(0, 4),
+                consensus=0.01, spectral_gap=0.6, mix_steps=2, mix_bytes=4096.0)
+    base.update(kw)
+    return api.MixEvent(**base)
+
+
+def test_jsonl_sink_round_trip_unit(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    events = [_round_event(), _flush_event(), _mix_event()]
+    with obs.JsonlSink(path) as sink:
+        for e in events:
+            sink.emit(e)
+    back = obs.read_events(path)
+    assert back == events  # typed, field-exact (frozen-dataclass equality)
+    assert [type(e).__name__ for e in back] == ["RoundEvent", "FlushEvent", "MixEvent"]
+
+
+def test_jsonl_sink_unknown_event_tag(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    with open(path, "w") as f:
+        f.write('{"event": "MysteryEvent", "selected": []}\n')
+    with pytest.raises(ValueError, match="MysteryEvent"):
+        obs.read_events(path)
+
+
+def test_metrics_registry_histogram_percentiles():
+    reg = obs.MetricsRegistry()
+    h = reg.histogram("lat")
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.percentile(50) == pytest.approx(50.5)
+    assert h.percentile(99) == pytest.approx(99.01)
+    snap = reg.snapshot()["lat"]
+    assert snap["count"] == 100 and snap["min"] == 1.0 and snap["max"] == 100.0
+    reg.counter("n").inc(2)
+    reg.gauge("g").set(7.0)
+    assert reg.snapshot()["n"] == 2.0 and reg.snapshot()["g"] == 7.0
+    with pytest.raises(TypeError):
+        reg.gauge("n")  # name already registered as a Counter
+
+
+def test_metrics_sink_folds_heterogeneous_stream(tmp_path):
+    sink = obs.MetricsSink(model_bytes=100.0)
+    for e in (_round_event(), _flush_event(), _mix_event()):
+        sink.emit(e)
+    snap = sink.snapshot()
+    assert snap["events"] == 3.0
+    assert snap["rounds"] == 1.0 and snap["flushes"] == 1.0 and snap["mixes"] == 1.0
+    assert snap["co2_g_total"] == pytest.approx(30.0)
+    assert snap["co2_g_total[region=1]"] == pytest.approx(11.0)
+    # bytes: round 2 clients *2*100 + flush 1 client *2*100 + mix 4096
+    assert snap["bytes_moved"] == pytest.approx(400.0 + 200.0 + 4096.0)
+    assert snap["eps_spent"] == pytest.approx(0.0)  # last event's value
+    assert snap["consensus"]["count"] == 1
+    assert snap["staleness"]["p50"] == pytest.approx(1.5)
+    out = sink.to_json(str(tmp_path / "metrics.json"))
+    assert json.load(open(out)) == json.loads(json.dumps(snap))
+
+
+def test_history_recorder_tolerates_heterogeneous_streams():
+    rec = api.HistoryRecorder(GOSSIP_HISTORY_KEYS)
+    rec.emit(_round_event())      # no consensus/spectral_gap/mix_* fields
+    rec.emit(_mix_event())
+    assert rec.history["consensus"] == [None, 0.01]
+    assert rec.history["acc"] == [0.5, 0.7]
+
+
+def test_console_sink_tags_by_event_type():
+    import io
+
+    buf = io.StringIO()
+    sink = api.ConsoleSink(stream=buf)
+    sink.emit(_round_event())
+    sink.emit(_flush_event())
+    sink.emit(_mix_event())
+    lines = buf.getvalue().splitlines()
+    assert lines[0].startswith("round") and "staleness" not in lines[0]
+    assert lines[1].startswith("flush") and "staleness=1.50" in lines[1]
+    assert lines[2].startswith("mix") and "consensus=0.0100" in lines[2]
+
+
+def test_manifest_round_trip_and_config_hash(tmp_path):
+    cfg = api.ExperimentConfig()
+    path = str(tmp_path / "run.json")
+    man = obs.write_manifest(path, cfg=cfg, strategy="sync",
+                             extra={"summary": {"final_acc": 0.9}})
+    back = obs.read_manifest(path)
+    assert back["schema"] == obs.MANIFEST_SCHEMA
+    assert back["strategy"] == "sync"
+    assert back["config_hash"] == obs.config_hash(cfg) == man["config_hash"]
+    assert back["config"]["training"]["rounds"] == cfg.training.rounds
+    assert back["jax_version"] == jax.__version__
+    assert back["summary"] == {"final_acc": 0.9}
+    # the hash keys the experiment definition: any field change moves it
+    cfg2 = api.ExperimentConfig(training=api.TrainingConfig(rounds=7))
+    assert obs.config_hash(cfg2) != obs.config_hash(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Integration: traced runs across all three strategies
+# ---------------------------------------------------------------------------
+
+_BASE = dict(n_clients=6, clients_per_round=3, rounds=2, local_steps=2,
+             batch_size=16, eval_every=1, seed=3)
+
+_EXPECTED_SPANS = {
+    "sync": {"run", "round", "select", "train", "aggregate", "eval"},
+    "async_hier": {"run", "select", "train", "flush", "aggregate",
+                   "edge_sync", "eval"},
+    "gossip": {"run", "round", "select", "train", "mix", "eval"},
+}
+
+_EXPECTED_EVENT = {"sync": "RoundEvent", "async_hier": "FlushEvent",
+                   "gossip": "MixEvent"}
+
+
+def _task():
+    data = make_image_dataset(MNIST_LIKE, seed=1, n_train=256, n_test=96)
+    parts = dirichlet_partition(data["train"]["label"], _BASE["n_clients"], 0.5, seed=1)
+    clients = build_clients(data["train"], parts)
+    rcfg = ResNetConfig(name="t", widths=(8, 16), depths=(1, 1),
+                        in_channels=1, num_classes=10)
+    params = init_resnet(jax.random.PRNGKey(0), rcfg)
+    return api.FederatedTask(
+        loss_fn=lambda p, b: resnet_loss(p, rcfg, b),
+        eval_fn=lambda p, b: resnet_loss(p, rcfg, b)[1],
+        params0=params, clients=clients, test_data=data["test"],
+    )
+
+
+def _cfg(mode):
+    topo = {
+        "sync": api.TopologyConfig(),
+        "async_hier": api.TopologyConfig(mode="async_hier", n_regions=2,
+                                         buffer_k=2, concurrency=4),
+        "gossip": api.TopologyConfig(mode="gossip", graph="ring", mixing_steps=2),
+    }[mode]
+    return api.ExperimentConfig(training=api.TrainingConfig(**_BASE), topology=topo)
+
+
+class _Capture:
+    def __init__(self):
+        self.events = []
+
+    def emit(self, event):
+        self.events.append(event)
+
+
+@pytest.fixture(scope="module")
+def observed_runs(tmp_path_factory):
+    """One traced (full RunArtifacts) + one untraced run per strategy."""
+    runs = {}
+    for mode in ("sync", "async_hier", "gossip"):
+        d = str(tmp_path_factory.mktemp(f"obs_{mode}"))
+        arts = obs.RunArtifacts(d)
+        cap = _Capture()
+        fed = api.Federation(_cfg(mode), _task(), telemetry=[*arts.sinks, cap],
+                             tracer=arts.tracer)
+        arts.metrics.model_bytes = fed.ctx.model_bytes
+        hist = fed.run()
+        arts.finalize(cfg=_cfg(mode), strategy=fed.strategy.name,
+                      summary={"final_acc": hist["final_acc"]})
+        hist_plain = api.Federation(_cfg(mode), _task()).run()
+        runs[mode] = dict(dir=d, hist=hist, hist_plain=hist_plain,
+                          events=cap.events)
+    return runs
+
+
+@pytest.mark.parametrize("mode", ["sync", "async_hier", "gossip"])
+def test_event_log_round_trips(observed_runs, mode):
+    run = observed_runs[mode]
+    back = obs.read_events(os.path.join(run["dir"], "events.jsonl"))
+    assert back == run["events"]  # field-exact typed round-trip
+    assert len(back) == _BASE["rounds"]
+    assert all(type(e).__name__ == _EXPECTED_EVENT[mode] for e in back)
+
+
+@pytest.mark.parametrize("mode", ["sync", "async_hier", "gossip"])
+def test_trace_artifacts_and_manifest(observed_runs, mode):
+    run = observed_runs[mode]
+    rows = obs.read_spans(os.path.join(run["dir"], "trace.jsonl"))
+    names = {r["name"] for r in rows}
+    assert _EXPECTED_SPANS[mode] <= names
+    # the root span is the strategy run and every other span nests inside it
+    roots = [r for r in rows if r["depth"] == 0]
+    assert len(roots) == 1 and roots[0]["name"] == "run"
+    assert roots[0]["attrs"]["strategy"] == mode
+    end = roots[0]["ts_us"] + roots[0]["dur_us"]
+    assert all(r["ts_us"] + r["dur_us"] <= end + 1.0 for r in rows)
+    # instrumented spans carry the CO2/bytes the report attributes per phase
+    outer = "flush" if mode == "async_hier" else "round"
+    attrs = [r["attrs"] for r in rows if r["name"] == outer]
+    assert len(attrs) == _BASE["rounds"]
+    assert sum(a["co2_g"] for a in attrs) > 0
+
+    _validate_chrome(os.path.join(run["dir"], "trace.json"))
+    man = obs.read_manifest(os.path.join(run["dir"], "run.json"))
+    assert man["strategy"] == mode
+    assert man["config_hash"] == obs.config_hash(_cfg(mode))
+
+    snap = json.load(open(os.path.join(run["dir"], "metrics.json")))
+    assert snap["events"] == _BASE["rounds"]
+    assert snap["co2_g_total"] > 0
+
+
+@pytest.mark.parametrize("mode", ["sync", "async_hier", "gossip"])
+def test_tracing_leaves_history_bitwise_identical(observed_runs, mode):
+    run = observed_runs[mode]
+    assert run["hist"] == run["hist_plain"]
+
+
+def test_report_cli_summarizes_run_dir(observed_runs, capsys):
+    rc = report_mod.main([observed_runs["async_hier"]["dir"]])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "per-phase breakdown" in out
+    assert "flush" in out and "train" in out
+    assert "strategy=async_hier" in out
+    assert "CO2 by region" in out
+
+    rc = report_mod.main([observed_runs["gossip"]["dir"]])
+    out = capsys.readouterr().out
+    assert rc == 0 and "mix" in out and "final consensus distance" in out

@@ -58,6 +58,13 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", metavar="DIR", default=None,
                     help="write repro.obs run artifacts (trace/events/manifest) here")
+    ap.add_argument("--ckpt", metavar="DIR", default=None,
+                    help="checkpoint the full federation state (edge buffers, "
+                         "accountants, event clock) here")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="checkpoint cadence in global flushes (with --ckpt)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest checkpoint under --ckpt")
     args = ap.parse_args()
 
     spec = get_dataset_spec(args.dataset)
@@ -94,6 +101,8 @@ def main():
             staleness_cap=args.staleness_cap, latency_spread=args.latency_spread,
         ),
         orchestrator=api.OrchestratorConfig(selection=variant.pop("selection")),
+        checkpoint=api.CheckpointConfig(directory=args.ckpt,
+                                        every_k_rounds=args.ckpt_every),
     )
     if variant:
         raise TypeError(f"unmapped variant keys: {sorted(variant)}")
@@ -108,7 +117,7 @@ def main():
                          tracer=arts.tracer if arts else None)
     if arts:
         arts.metrics.model_bytes = fed.ctx.model_bytes  # price edge traffic
-    hist = fed.run()
+    hist = fed.run(resume_from=args.ckpt if args.resume else None)
     if arts:
         arts.finalize(cfg=cfg, strategy=fed.strategy.name,
                       summary={"final_acc": hist["final_acc"],
@@ -121,10 +130,13 @@ def main():
     print(f"cumulative CO2     : {hist['cum_co2_total_g']:.0f} g")
     print(f"flushes by region  : {hist['buffer_flushes']}")
     print(f"CO2 by region (g)  : { {k: round(v, 1) for k, v in hist['co2_by_region_g'].items()} }")
-    print(f"simulated time     : {hist['sim_time_s'][-1]:.0f} s")
+    # per-flush history columns cover only THIS run's flushes, so they are
+    # empty when --resume continues an already-complete checkpoint
+    if hist["sim_time_s"]:
+        print(f"simulated time     : {hist['sim_time_s'][-1]:.0f} s")
     if args.dp and args.per_region_accounting:
         print(f"eps by region      : { {k: round(v, 3) for k, v in hist['eps_by_region'].items()} }")
-    elif args.dp:
+    elif args.dp and hist["eps_spent"]:
         print(f"epsilon spent      : {hist['eps_spent'][-1]:.3f}")
 
 

@@ -52,6 +52,12 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", metavar="DIR", default=None,
                     help="write repro.obs run artifacts (trace/events/manifest) here")
+    ap.add_argument("--ckpt", metavar="DIR", default=None,
+                    help="checkpoint the full fleet state (all node rows) here")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="checkpoint cadence in rounds (with --ckpt)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest checkpoint under --ckpt")
     args = ap.parse_args()
 
     spec = get_dataset_spec(args.dataset)
@@ -75,6 +81,8 @@ def main():
             carbon_beta=args.carbon_beta if args.carbon_weighted else 0.0,
         ),
         orchestrator=api.OrchestratorConfig(selection=args.selection),
+        checkpoint=api.CheckpointConfig(directory=args.ckpt,
+                                        every_k_rounds=args.ckpt_every),
     )
     task = api.FederatedTask(
         loss_fn=lambda p, b: resnet_loss(p, rcfg, b),
@@ -91,7 +99,7 @@ def main():
     sinks = [api.ConsoleSink(), *(arts.sinks if arts else [])]
     fed = api.Federation(cfg, task, telemetry=sinks,
                          tracer=arts.tracer if arts else None)
-    hist = fed.run()
+    hist = fed.run(resume_from=args.ckpt if args.resume else None)
     if arts:
         arts.finalize(cfg=cfg, strategy=fed.strategy.name,
                       summary={"final_acc": hist["final_acc"],

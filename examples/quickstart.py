@@ -11,16 +11,45 @@ telemetry sink printing per-round lines.
 (``repro.obs``): a Perfetto-loadable Chrome trace, the span + event JSONL
 streams, the metrics snapshot, and a self-describing run manifest —
 summarize them with ``python -m repro.obs.report out/``.
+
+``--ckpt ckpt/`` checkpoints the full federation state every
+``--ckpt-every`` rounds; kill the process at any point and ``--resume``
+continues from the newest checkpoint, replaying the remaining rounds
+bitwise.  ``--crash-at-round R`` SIGKILLs the run mid-round (the CI
+fault-injection hook); ``--history-out FILE`` dumps the history dict as
+JSON so crashed+resumed and uninterrupted runs can be diffed.
 """
 import argparse
+import json
+import os
+import signal
 
 import jax
 
 from repro import api, obs
+from repro.checkpoint import CheckpointManager, CheckpointPolicy
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
 from repro.data.synthetic import MNIST_LIKE, make_image_dataset
 from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
+
+
+class _KillSink:
+    """Fault injection for the resume smoke test: SIGKILL the process while
+    round ``r``'s event is being emitted — after draining queued checkpoint
+    writes, so the crash deterministically leaves the last policy-scheduled
+    checkpoint (< r) on disk and nothing newer."""
+
+    def __init__(self, rnd: int, manager):
+        self.rnd = rnd
+        self.manager = manager
+
+    def emit(self, event):
+        if event.round >= self.rnd:
+            if self.manager is not None:
+                self.manager.wait()
+            print(f"[crash injection] SIGKILL at round {event.round}", flush=True)
+            os.kill(os.getpid(), signal.SIGKILL)
 
 
 def main():
@@ -28,6 +57,16 @@ def main():
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--trace", metavar="DIR", default=None,
                     help="write repro.obs run artifacts (trace/events/manifest) here")
+    ap.add_argument("--ckpt", metavar="DIR", default=None,
+                    help="checkpoint the full federation state under this directory")
+    ap.add_argument("--ckpt-every", type=int, default=1,
+                    help="checkpoint cadence in rounds (with --ckpt)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest checkpoint under --ckpt")
+    ap.add_argument("--crash-at-round", type=int, default=None,
+                    help="SIGKILL the process mid-round R (fault injection)")
+    ap.add_argument("--history-out", metavar="FILE", default=None,
+                    help="write the run's history dict as JSON")
     args = ap.parse_args()
 
     data = make_image_dataset(MNIST_LIKE, n_train=2000, n_test=400)
@@ -55,13 +94,26 @@ def main():
         clients=clients,
         test_data=data["test"],
     )
+    manager = None
+    if args.ckpt:
+        manager = CheckpointManager(
+            args.ckpt, CheckpointPolicy(every_k_rounds=args.ckpt_every))
     arts = obs.RunArtifacts(args.trace) if args.trace else None
     sinks = [api.ConsoleSink(), *(arts.sinks if arts else [])]
+    if args.crash_at_round is not None:
+        sinks.append(_KillSink(args.crash_at_round, manager))
     fed = api.Federation(cfg, task, telemetry=sinks,
                          tracer=arts.tracer if arts else None)
     if arts:
         arts.metrics.model_bytes = fed.ctx.model_bytes  # price server traffic
-    hist = fed.run()
+    hist = fed.run(checkpoint=manager,
+                   resume_from=args.ckpt if args.resume else None)
+    if args.resume and hist["round"]:
+        print(f"\nresumed at round {hist['round'][0]} "
+              f"(rounds 0..{hist['round'][0] - 1} restored from {args.ckpt})")
+    if args.history_out:
+        with open(args.history_out, "w") as f:
+            json.dump(hist, f)
     print(f"\nprivacy pipeline    : {' -> '.join(fed.ctx.pipeline.describe()) or 'plain'}")
     print(f"final accuracy      : {hist['final_acc']:.3f}")
     print(f"mean CO2 per round  : {hist['mean_co2_g']:.0f} g")

@@ -35,8 +35,9 @@ registered; the built-in ``gossip`` strategy is itself registered this way.
 The legacy ``FLConfig``/``Simulation`` entry points survive as deprecation
 shims over this package (see the README migration table).
 """
-from repro.api.config import (CarbonConfig, ExperimentConfig, OrchestratorConfig,
-                              PrivacyConfig, TopologyConfig, TrainingConfig)
+from repro.api.config import (CarbonConfig, CheckpointConfig, ExperimentConfig,
+                              OrchestratorConfig, PrivacyConfig, TopologyConfig,
+                              TrainingConfig)
 from repro.api.federation import (STRATEGIES, Federation, Strategy, build,
                                   register_strategy, strategy_names)
 from repro.api.pipeline import (AggregationContext, ClipStage, MaskStage,
@@ -55,8 +56,8 @@ from repro.api.sync import SyncStrategy  # noqa: E402  isort: skip
 
 __all__ = [
     "AggregationContext", "AsyncHierStrategy", "build", "build_pipeline",
-    "CallbackSink", "CarbonConfig", "ClipStage", "ConsoleSink",
-    "ExperimentConfig", "Federation", "FederatedTask", "FlushEvent",
+    "CallbackSink", "CarbonConfig", "CheckpointConfig", "ClipStage",
+    "ConsoleSink", "ExperimentConfig", "Federation", "FederatedTask", "FlushEvent",
     "GossipStrategy", "HistoryRecorder", "MaskStage", "MixEvent",
     "NoiseStage", "OrchestratorConfig", "PrivacyConfig", "PrivacyPipeline",
     "QuantizeStage", "register_strategy", "RoundEvent", "RuntimeContext",

@@ -41,7 +41,6 @@ per-region values land in the ``eps_by_region`` summary.
 from __future__ import annotations
 
 import heapq
-import itertools
 from typing import Callable
 
 import jax
@@ -56,6 +55,27 @@ from repro.core import orchestrator as orch
 from repro.fl import hierarchy
 from repro.privacy import dp as dp_mod
 from repro.privacy.accountant import SubsampledAccountant
+
+
+def _pack_entry(e: hierarchy.BufferEntry) -> dict:
+    """BufferEntry -> plain container (checkpoint form)."""
+    return {
+        "client": e.client, "local": e.local, "version": e.version,
+        "wave": e.wave, "weight": e.weight, "loss": e.loss,
+        "t_hours": e.t_hours, "row": np.asarray(e.row),
+        "k_agg": np.asarray(e.k_agg), "inten": np.asarray(e.inten),
+    }
+
+
+def _unpack_entry(d: dict) -> hierarchy.BufferEntry:
+    return hierarchy.BufferEntry(
+        client=int(d["client"]), local=int(d["local"]),
+        version=int(d["version"]), wave=int(d["wave"]),
+        weight=float(d["weight"]), row=jnp.asarray(np.asarray(d["row"])),
+        loss=float(d["loss"]), t_hours=float(d["t_hours"]),
+        k_agg=jnp.asarray(np.asarray(d["k_agg"])),
+        inten=jnp.asarray(np.asarray(d["inten"])),
+    )
 
 
 class AsyncHierStrategy:
@@ -112,6 +132,106 @@ class AsyncHierStrategy:
             ))
             if per_region:
                 self.accountants[ridx] = SubsampledAccountant(dp.delta)
+        # event-clock state; populated on the first run() call (or restored
+        # by load_state_dict, which flips _started so run() continues mid-heap)
+        self._started = False
+        self._seq = 0        # heap tiebreaker: plain int (serializable)
+        self._active = None  # (ridx, trigger entry) while draining a region
+
+    # ------------------------------------------------------------------
+    def state_dict(self, ctx: RuntimeContext) -> dict:
+        """The whole event engine: clock, heap (packed BufferEntries),
+        per-region edge state (models, accumulators, buffers, MARL state,
+        PRNG streams, wave/flush counters), per-region accountant step
+        logs, and the shared runtime — everything the trajectory depends
+        on, so a resumed run replays the same event sequence bitwise."""
+        from repro.checkpoint.state import pack_tree
+
+        regions = []
+        for reg in self.regions:
+            regions.append({
+                "key": np.asarray(reg.key),
+                "orch_state": pack_tree(reg.orch_state),
+                "edge_params": pack_tree(reg.edge_params),
+                "edge_accum": np.asarray(reg.edge_accum),
+                "version": reg.version, "waves": reg.waves,
+                "flushes": reg.flushes, "pending": reg.pending,
+                "inflight": reg.inflight, "synced_version": reg.synced_version,
+                "co2_g": reg.co2_g,
+                "buffer": [_pack_entry(e) for e in reg.buffer],
+                # msgpack maps need str keys; waves are ints
+                "wave_flushes": {str(k): v for k, v in reg.wave_flushes.items()},
+            })
+        return {
+            "flushes": self.flushes,
+            "now": self.now,
+            "seq": self._seq,
+            "global_version": self.global_version,
+            "co2_l": list(self.co2_l),
+            "dur_l": list(self.dur_l),
+            "stale_l": list(self.stale_l),
+            "cum_co2": self.cum_co2,
+            "acc": self.acc,
+            "last_acc": self.last_acc,
+            "heap": [
+                {"t": t, "seq": sq, "ridx": ridx, "entry": _pack_entry(e)}
+                for (t, sq, ridx, e) in self.heap
+            ],
+            "active": (
+                None if self._active is None
+                else {"ridx": self._active[0], "entry": _pack_entry(self._active[1])}
+            ),
+            "regions": regions,
+            "accountants": {str(r): a.state_dict() for r, a in self.accountants.items()},
+            "runtime": ctx.state_dict(),
+        }
+
+    def load_state_dict(self, ctx: RuntimeContext, s: dict) -> None:
+        from repro.checkpoint.state import unpack_tree
+
+        if len(s["regions"]) != len(self.regions):
+            raise ValueError(
+                f"region count mismatch: checkpoint has {len(s['regions'])}, "
+                f"this run has {len(self.regions)}"
+            )
+        self.flushes = int(s["flushes"])
+        self.now = float(s["now"])
+        self._seq = int(s["seq"])
+        self.global_version = int(s["global_version"])
+        self.co2_l = [float(v) for v in s["co2_l"]]
+        self.dur_l = [float(v) for v in s["dur_l"]]
+        self.stale_l = [float(v) for v in s["stale_l"]]
+        self.cum_co2 = float(s["cum_co2"])
+        self.acc = float(s["acc"])
+        self.last_acc = float(s["last_acc"])
+        # restored in saved order: a valid heap restored verbatim pops in
+        # the same sequence, which is what keeps the event replay bitwise
+        self.heap = [
+            (float(d["t"]), int(d["seq"]), int(d["ridx"]), _unpack_entry(d["entry"]))
+            for d in s["heap"]
+        ]
+        self._active = (
+            None if s["active"] is None
+            else (int(s["active"]["ridx"]), _unpack_entry(s["active"]["entry"]))
+        )
+        for reg, rs in zip(self.regions, s["regions"]):
+            reg.key = jnp.asarray(np.asarray(rs["key"]))
+            reg.orch_state = unpack_tree(rs["orch_state"], reg.orch_state)
+            reg.edge_params = unpack_tree(rs["edge_params"], reg.edge_params)
+            reg.edge_accum = jnp.asarray(np.asarray(rs["edge_accum"]))
+            reg.version = int(rs["version"])
+            reg.waves = int(rs["waves"])
+            reg.flushes = int(rs["flushes"])
+            reg.pending = int(rs["pending"])
+            reg.inflight = int(rs["inflight"])
+            reg.synced_version = int(rs["synced_version"])
+            reg.co2_g = float(rs["co2_g"])
+            reg.buffer = [_unpack_entry(d) for d in rs["buffer"]]
+            reg.wave_flushes = {int(k): int(v) for k, v in rs["wave_flushes"].items()}
+        for r, a in self.accountants.items():
+            a.load_state_dict(s["accountants"][str(r)])
+        ctx.load_state_dict(s["runtime"])
+        self._started = True
 
     # ------------------------------------------------------------------
     def _dispatch(self, ctx: RuntimeContext, reg: hierarchy.Region, now: float, heap: list) -> None:
@@ -145,7 +265,8 @@ class AsyncHierStrategy:
                 loss=float(res.loss_last[j]), t_hours=t_hours, k_agg=k_agg,
                 inten=inten,
             )
-            heapq.heappush(heap, (float(comp[j]), next(self._seq), reg.idx, entry))
+            heapq.heappush(heap, (float(comp[j]), self._seq, reg.idx, entry))
+            self._seq += 1
         reg.waves += 1
         reg.inflight += len(sel_global)
 
@@ -267,66 +388,90 @@ class AsyncHierStrategy:
         return dp_mod.spent_epsilon(dp, flushes)
 
     # ------------------------------------------------------------------
+    def _drain(self, ctx: RuntimeContext, reg: hierarchy.Region,
+               entry: hierarchy.BufferEntry, emit: Callable) -> None:
+        """Flush ``reg``'s buffer while it holds >= K deltas, then refill
+        the region's dispatch pipeline.  ``entry`` is the completion event
+        that triggered the drain (its wave keys derive the flush PRNG).
+
+        This is the inner loop of :meth:`run`, factored out so a checkpoint
+        taken between two flushes of the same drain (``self._active``) can
+        resume exactly where it stopped.
+        """
+        train = ctx.train
+        while len(reg.buffer) >= self.buffer_k and self.flushes < train.rounds:
+            with ctx.tracer.span("flush", region=reg.idx, flush=self.flushes) as fsp:
+                entries, taus, co2, dur, flush_mask = self._flush(ctx, reg, entry)
+                fsp.set(co2_g=co2, bytes=2 * len(entries) * ctx.model_bytes)
+            # straggler EMA: observed staleness per flushed client feeds
+            # the MARL state so selection can demote chronic stragglers
+            # (zero in the sync-equivalence regime -> no behavior change).
+            # maximum.at: a client with two entries in one flush records
+            # its worst staleness, not whichever entry came last.
+            tau_vec = np.zeros(reg.n, np.float32)
+            np.maximum.at(tau_vec, [e.local for e in entries], taus)
+            reg.orch_state = orch.observe_staleness(reg.orch_state, flush_mask, tau_vec)
+            self.cum_co2 += co2
+            self.flushes += 1
+            if self.flushes % train.eval_every == 0 or self.flushes == train.rounds:
+                self.acc = ctx.evaluate(ctx.server_state.params)
+            eff = -dur / 100.0
+            if ctx.uses_rl:
+                reg.orch_state, r = orch.update(
+                    reg.orch_state, flush_mask, jnp.float32(self.acc),
+                    jnp.float32(eff), jnp.float32(co2), jnp.mean(entry.inten),
+                )
+                r = float(r)
+            else:
+                r = 0.0
+            stale = float(np.mean(taus))
+            self.co2_l.append(co2)
+            self.dur_l.append(dur)
+            self.stale_l.append(stale)
+            self.last_acc = self.acc
+            emit(FlushEvent(
+                round=self.flushes - 1, acc=self.acc,
+                loss=float(np.mean([e.loss for e in entries])),
+                co2_g=co2, cum_co2_g=self.cum_co2, duration_s=dur, reward=r,
+                eps_spent=self._spent_epsilon(ctx, self.flushes),
+                selected=tuple(e.client for e in entries),
+                staleness=stale, region=reg.idx, sim_time_s=self.now,
+            ))
+            ctx.checkpoint_round(self, self.flushes - 1)
+        if self.flushes < train.rounds:
+            self._maybe_dispatch(ctx, reg, self.now, self.heap)
+        self._active = None
+
     def run(self, ctx: RuntimeContext, emit: Callable) -> dict:
         train = ctx.train
-        co2_l: list[float] = []
-        dur_l: list[float] = []
-        stale_l: list[float] = []
-        cum_co2 = 0.0
-        acc = ctx.evaluate(ctx.server_state.params)
-        last_acc = acc
-        heap: list = []
-        self._seq = itertools.count()
-        now = 0.0
-        for reg in self.regions:
-            self._maybe_dispatch(ctx, reg, now, heap)
+        if not self._started:
+            self.co2_l: list[float] = []
+            self.dur_l: list[float] = []
+            self.stale_l: list[float] = []
+            self.cum_co2 = 0.0
+            self.acc = ctx.evaluate(ctx.server_state.params)
+            self.last_acc = self.acc
+            self.heap: list = []
+            self._seq = 0
+            self.now = 0.0
+            self.flushes = 0
+            self._active = None
+            for reg in self.regions:
+                self._maybe_dispatch(ctx, reg, self.now, self.heap)
+            self._started = True
+        elif self._active is not None:
+            # resumed from a checkpoint taken between two flushes of one
+            # drain: finish that region's drain before popping the heap
+            ridx, entry = self._active
+            self._drain(ctx, self.regions[ridx], entry, emit)
 
-        flushes = 0
-        while flushes < train.rounds and heap:
-            now, _, ridx, entry = heapq.heappop(heap)
+        while self.flushes < train.rounds and self.heap:
+            self.now, _, ridx, entry = heapq.heappop(self.heap)
             reg = self.regions[ridx]
             reg.inflight -= 1
             reg.buffer.append(entry)
-            while len(reg.buffer) >= self.buffer_k and flushes < train.rounds:
-                with ctx.tracer.span("flush", region=ridx, flush=flushes) as fsp:
-                    entries, taus, co2, dur, flush_mask = self._flush(ctx, reg, entry)
-                    fsp.set(co2_g=co2, bytes=2 * len(entries) * ctx.model_bytes)
-                # straggler EMA: observed staleness per flushed client feeds
-                # the MARL state so selection can demote chronic stragglers
-                # (zero in the sync-equivalence regime -> no behavior change).
-                # maximum.at: a client with two entries in one flush records
-                # its worst staleness, not whichever entry came last.
-                tau_vec = np.zeros(reg.n, np.float32)
-                np.maximum.at(tau_vec, [e.local for e in entries], taus)
-                reg.orch_state = orch.observe_staleness(reg.orch_state, flush_mask, tau_vec)
-                cum_co2 += co2
-                flushes += 1
-                if flushes % train.eval_every == 0 or flushes == train.rounds:
-                    acc = ctx.evaluate(ctx.server_state.params)
-                eff = -dur / 100.0
-                if ctx.uses_rl:
-                    reg.orch_state, r = orch.update(
-                        reg.orch_state, flush_mask, jnp.float32(acc),
-                        jnp.float32(eff), jnp.float32(co2), jnp.mean(entry.inten),
-                    )
-                    r = float(r)
-                else:
-                    r = 0.0
-                stale = float(np.mean(taus))
-                co2_l.append(co2)
-                dur_l.append(dur)
-                stale_l.append(stale)
-                last_acc = acc
-                emit(FlushEvent(
-                    round=flushes - 1, acc=acc,
-                    loss=float(np.mean([e.loss for e in entries])),
-                    co2_g=co2, cum_co2_g=cum_co2, duration_s=dur, reward=r,
-                    eps_spent=self._spent_epsilon(ctx, flushes),
-                    selected=tuple(e.client for e in entries),
-                    staleness=stale, region=reg.idx, sim_time_s=now,
-                ))
-            if flushes < train.rounds:
-                self._maybe_dispatch(ctx, reg, now, heap)
+            self._active = (ridx, entry)
+            self._drain(ctx, reg, entry, emit)
 
         # drain: push any un-synced edge progress to the global model, and
         # charge emissions for training that was dispatched but never
@@ -334,25 +479,25 @@ class AsyncHierStrategy:
         # — the energy was spent whether or not a flush consumed the delta
         unflushed = 0.0
         leftovers: dict[int, list] = {reg.idx: list(reg.buffer) for reg in self.regions}
-        for _, _, ridx, entry in heap:
+        for _, _, ridx, entry in self.heap:
             leftovers[ridx].append(entry)
         for reg in self.regions:
             g, _ = self._emissions_for(ctx, leftovers[reg.idx])
             reg.co2_g += g
             unflushed += g
-        cum_co2 += unflushed
+        self.cum_co2 += unflushed
         pending = any(reg.pending for reg in self.regions)
         for reg in self.regions:
             self._edge_sync(ctx, reg)
         if pending:
-            last_acc = ctx.evaluate(ctx.server_state.params)
+            self.last_acc = ctx.evaluate(ctx.server_state.params)
         summary = {
-            "final_acc": last_acc,
-            "mean_co2_g": float(np.mean(co2_l)) if co2_l else 0.0,
-            "mean_duration_s": float(np.mean(dur_l)) if dur_l else 0.0,
-            "cum_co2_total_g": cum_co2,
+            "final_acc": self.last_acc,
+            "mean_co2_g": float(np.mean(self.co2_l)) if self.co2_l else 0.0,
+            "mean_duration_s": float(np.mean(self.dur_l)) if self.dur_l else 0.0,
+            "cum_co2_total_g": self.cum_co2,
             "unflushed_co2_g": unflushed,
-            "mean_staleness": float(np.mean(stale_l)) if stale_l else 0.0,
+            "mean_staleness": float(np.mean(self.stale_l)) if self.stale_l else 0.0,
             "buffer_flushes": {reg.idx: reg.flushes for reg in self.regions},
             "co2_by_region_g": {reg.idx: reg.co2_g for reg in self.regions},
         }

@@ -10,8 +10,9 @@ Here each subsystem owns its own config block:
     TopologyConfig      sync round loop vs async edge→global hierarchy
     CarbonConfig        fleet heterogeneity + carbon-phase clock (§III-D)
     OrchestratorConfig  selection policy + MARL state encoding (§III-B)
+    CheckpointConfig    fault tolerance: state snapshots + resume cadence
 
-``ExperimentConfig`` composes the five blocks and round-trips through plain
+``ExperimentConfig`` composes the blocks and round-trips through plain
 dicts (``to_dict``/``from_dict``) so experiment grids can live in JSON.  The
 deprecated ``FLConfig`` shim (``repro.fl.simulation``) maps its flat fields
 onto these blocks 1:1 — see the README migration table.
@@ -108,14 +109,38 @@ class OrchestratorConfig:
 
 
 @dataclasses.dataclass
+class CheckpointConfig:
+    """Fault tolerance: full-federation-state checkpointing + resume.
+
+    ``directory`` set makes ``Federation.run`` save the entire runtime +
+    strategy state (server/edge/node models, MARL Q-tables, RDP step logs,
+    PRNG chain, event-log cursor) after every ``every_k_rounds``-th round,
+    atomically and off the round loop; ``Federation.run(resume_from=...)``
+    restores it mid-run, bitwise.  ``keep_last_n`` bounds retained steps
+    (0 keeps all).  ``directory=None`` (default) disables checkpointing.
+    """
+
+    directory: Optional[str] = None
+    every_k_rounds: int = 1
+    keep_last_n: int = 0
+
+    def __post_init__(self):
+        if self.every_k_rounds < 1:
+            raise ValueError("every_k_rounds must be >= 1")
+        if self.keep_last_n < 0:
+            raise ValueError("keep_last_n must be >= 0")
+
+
+@dataclasses.dataclass
 class ExperimentConfig:
-    """One experiment = the composition of the five subsystem blocks."""
+    """One experiment = the composition of the subsystem blocks."""
 
     training: TrainingConfig = dataclasses.field(default_factory=TrainingConfig)
     privacy: PrivacyConfig = dataclasses.field(default_factory=PrivacyConfig)
     topology: TopologyConfig = dataclasses.field(default_factory=TopologyConfig)
     carbon: CarbonConfig = dataclasses.field(default_factory=CarbonConfig)
     orchestrator: OrchestratorConfig = dataclasses.field(default_factory=OrchestratorConfig)
+    checkpoint: CheckpointConfig = dataclasses.field(default_factory=CheckpointConfig)
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict[str, Any]:
@@ -126,6 +151,7 @@ class ExperimentConfig:
             "topology": dataclasses.asdict(self.topology),
             "carbon": dataclasses.asdict(self.carbon),
             "orchestrator": dataclasses.asdict(self.orchestrator),
+            "checkpoint": dataclasses.asdict(self.checkpoint),
         }
         dp = self.privacy.dp
         d["privacy"]["dp"] = dict(dp._asdict()) if dp is not None else None
@@ -143,4 +169,5 @@ class ExperimentConfig:
             topology=TopologyConfig(**d.get("topology", {})),
             carbon=CarbonConfig(**d.get("carbon", {})),
             orchestrator=OrchestratorConfig(**d.get("orchestrator", {})),
+            checkpoint=CheckpointConfig(**d.get("checkpoint", {})),
         )

@@ -61,6 +61,12 @@ class Strategy(Protocol):
     def setup(self, ctx: RuntimeContext) -> None: ...
     def run(self, ctx: RuntimeContext, emit: Callable[[RoundEvent], None]) -> dict: ...
 
+    # Fault tolerance is opt-in for third-party strategies: ``state_dict``/
+    # ``load_state_dict`` (mirroring the built-ins' signatures
+    # ``state_dict(ctx) -> dict`` / ``load_state_dict(ctx, state)``) are only
+    # required when ``Federation.run`` is asked to checkpoint or resume —
+    # a strategy without them still runs, it just can't be checkpointed.
+
 
 #: registry mapping ``TopologyConfig.mode`` names to strategy factories; the
 #: built-ins land on first use (lazily — sync/async_hier import the runtime
@@ -139,17 +145,94 @@ class Federation:
         self._ran = False
 
     # ------------------------------------------------------------------
-    def run(self, progress: Optional[Callable[[dict], None]] = None) -> dict:
+    def _resolve_manager(self, checkpoint):
+        """None | directory str | CheckpointManager -> manager (or None).
+
+        With no explicit argument, ``cfg.checkpoint.directory`` decides; a
+        bare directory (argument or config) gets a manager with the config
+        block's cadence/retention knobs.
+        """
+        from repro.checkpoint import CheckpointManager, CheckpointPolicy
+
+        ck = self.cfg.checkpoint
+        if checkpoint is None and ck.directory:
+            checkpoint = ck.directory
+        if checkpoint is None or isinstance(checkpoint, CheckpointManager):
+            return checkpoint
+        policy = CheckpointPolicy(every_k_rounds=ck.every_k_rounds,
+                                  keep_last_n=ck.keep_last_n)
+        return CheckpointManager(str(checkpoint), policy)
+
+    def _restore(self, resume_from: str) -> None:
+        """Load the newest checkpoint under ``resume_from`` into the
+        strategy + runtime, validating it belongs to this experiment."""
+        from repro.checkpoint import load_checkpoint, resume_key
+
+        if not hasattr(self.strategy, "load_state_dict"):
+            raise ValueError(
+                f"strategy {self.strategy.name!r} does not implement "
+                "state_dict/load_state_dict and cannot resume"
+            )
+        state, meta = load_checkpoint(resume_from)
+        if state.get("strategy") != self.strategy.name:
+            raise ValueError(
+                f"checkpoint was written by strategy {state.get('strategy')!r}, "
+                f"this federation runs {self.strategy.name!r}"
+            )
+        stored_key = meta.get("resume_key")
+        if stored_key is not None and stored_key != resume_key(self.cfg):
+            raise ValueError(
+                "checkpoint config mismatch: this run's config differs from "
+                "the checkpointed one beyond training.rounds / the checkpoint "
+                "block — resume requires an otherwise-identical experiment"
+            )
+        # cut append-mode event logs back to the checkpoint's cursor so the
+        # re-run rounds append cleanly (no duplicate rows past the snapshot)
+        offsets = (state.get("telemetry") or {}).get("jsonl_offsets") or {}
+        for sink in self.telemetry:
+            if getattr(sink, "append", False) and callable(getattr(sink, "truncate_to", None)):
+                off = offsets.get(str(getattr(sink, "path", None)))
+                if off is not None:
+                    sink.truncate_to(int(off))
+        self.strategy.load_state_dict(self.ctx, state["state"])
+
+    def run(
+        self,
+        progress: Optional[Callable[[dict], None]] = None,
+        *,
+        checkpoint=None,
+        resume_from: Optional[str] = None,
+    ) -> dict:
         """Drive the strategy to completion; returns the history dict.
 
         ``progress`` is the legacy per-round callback — it is adapted onto
         the event stream via :class:`CallbackSink`.  A ``Federation`` is
         single-shot (its runtime state is consumed by the run), matching the
         legacy engines.
+
+        ``checkpoint`` (a directory or a ``repro.checkpoint.CheckpointManager``;
+        defaults to ``cfg.checkpoint.directory``) saves the full federation
+        state per the checkpoint policy, atomically and off the round loop.
+        ``resume_from`` (a step dir or a manager directory — newest loadable
+        step wins) restores strategy + runtime state before running, so the
+        remaining rounds replay bitwise what an uninterrupted run would have
+        produced.  A resumed run's history dict covers the resumed rounds;
+        the pre-crash rounds live in the durable event log / checkpoints.
         """
         if self._ran:
             raise RuntimeError("Federation.run() is single-shot; build a new one")
         self._ran = True
+        manager = self._resolve_manager(checkpoint)
+        if manager is not None:
+            if not hasattr(self.strategy, "state_dict"):
+                raise ValueError(
+                    f"strategy {self.strategy.name!r} does not implement "
+                    "state_dict/load_state_dict and cannot be checkpointed"
+                )
+            self.ctx.ckpt_manager = manager
+            manager.telemetry_probe = self._jsonl_offsets
+        if resume_from is not None:
+            self._restore(resume_from)
         recorder = HistoryRecorder(self.strategy.history_keys)
         sinks: list[TelemetrySink] = [recorder, *self.telemetry]
         if progress is not None:
@@ -159,11 +242,26 @@ class Federation:
             for sink in sinks:
                 sink.emit(event)
 
-        with self.ctx.tracer.span("run", strategy=self.strategy.name):
-            summary = self.strategy.run(self.ctx, emit)
+        try:
+            with self.ctx.tracer.span("run", strategy=self.strategy.name):
+                summary = self.strategy.run(self.ctx, emit)
+        finally:
+            if manager is not None:
+                manager.wait()  # drain background writes; surface failures
         history = recorder.history
         history.update(summary)
         return history
+
+    def _jsonl_offsets(self) -> dict:
+        """Byte cursors of every appendable event-log sink (folded into each
+        checkpoint so a resume can truncate the logs to the snapshot)."""
+        offsets = {}
+        for sink in self.telemetry:
+            path = getattr(sink, "path", None)
+            tell = getattr(sink, "tell", None)
+            if path is not None and callable(tell):
+                offsets[str(path)] = int(tell())
+        return {"jsonl_offsets": offsets}
 
 
 def build(

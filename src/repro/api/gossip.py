@@ -105,6 +105,58 @@ class GossipStrategy:
         # fleet state: one model row per client, all starting at params0
         row0 = ctx.pspace.ravel(ctx.server_state.params)
         self.node_rows = jnp.tile(row0[None, :], (ctx.train.n_clients, 1))
+        # run-loop state on the strategy so checkpoints capture it mid-run
+        self.start_round = 0
+        self.co2_l: list[float] = []
+        self.dur_l: list[float] = []
+        self.gap_l: list[float] = []
+        self.cum_co2 = 0.0
+        self.mix_bytes_total = 0.0
+        self.acc: float = 0.0
+        self.last_acc: float = 0.0
+        self.consensus = 0.0
+
+    # ------------------------------------------------------------------
+    def state_dict(self, ctx: RuntimeContext) -> dict:
+        """Serverless state is the whole fleet: the (n, P) per-node model
+        rows plus the PRNG chain, accumulators and the shared runtime's
+        orchestrator state (gossip never touches the server optimizer, but
+        its selection policy mutates ``orch_state``)."""
+        return {
+            "rounds_done": self.start_round,
+            "key": np.asarray(self.key),
+            "node_rows": np.asarray(self.node_rows),
+            "co2_l": list(self.co2_l),
+            "dur_l": list(self.dur_l),
+            "gap_l": list(self.gap_l),
+            "cum_co2": self.cum_co2,
+            "mix_bytes_total": self.mix_bytes_total,
+            "acc": self.acc,
+            "last_acc": self.last_acc,
+            "consensus": self.consensus,
+            "runtime": ctx.state_dict(),
+        }
+
+    def load_state_dict(self, ctx: RuntimeContext, s: dict) -> None:
+        n, dim = int(ctx.train.n_clients), int(ctx.pspace.dim)
+        rows = np.asarray(s["node_rows"])
+        if rows.shape != (n, dim):
+            raise ValueError(
+                f"node_rows shape mismatch: checkpoint has {rows.shape}, "
+                f"this run needs {(n, dim)}"
+            )
+        self.start_round = int(s["rounds_done"])
+        self.key = jnp.asarray(np.asarray(s["key"]))
+        self.node_rows = jnp.asarray(rows)
+        self.co2_l = [float(v) for v in s["co2_l"]]
+        self.dur_l = [float(v) for v in s["dur_l"]]
+        self.gap_l = [float(v) for v in s["gap_l"]]
+        self.cum_co2 = float(s["cum_co2"])
+        self.mix_bytes_total = float(s["mix_bytes_total"])
+        self.acc = float(s["acc"])
+        self.last_acc = float(s["last_acc"])
+        self.consensus = float(s["consensus"])
+        ctx.load_state_dict(s["runtime"])
 
     # ------------------------------------------------------------------
     def mean_model(self, ctx: RuntimeContext):
@@ -114,16 +166,11 @@ class GossipStrategy:
     # ------------------------------------------------------------------
     def run(self, ctx: RuntimeContext, emit: Callable) -> dict:
         train, cfg, topo = ctx.train, ctx.cfg, ctx.topology
-        co2_l: list[float] = []
-        dur_l: list[float] = []
-        gap_l: list[float] = []
-        cum_co2 = 0.0
-        mix_bytes_total = 0.0
-        acc = ctx.evaluate(self.mean_model(ctx))
-        last_acc = acc
-        consensus = 0.0
+        if self.start_round == 0:
+            self.acc = ctx.evaluate(self.mean_model(ctx))
+            self.last_acc = self.acc
         tracer = ctx.tracer
-        for rnd in range(train.rounds):
+        for rnd in range(self.start_round, train.rounds):
             with tracer.span("round", round=rnd, strategy=self.name) as round_sp:
                 # same 5-way split as the sync strategy: k_agg/k_noise are unused
                 # (no server aggregation) but keeping the schedule makes the
@@ -159,36 +206,38 @@ class GossipStrategy:
                     for _ in range(topo.mixing_steps):
                         rows = gossip_mod.mix_rows(ctx.pspace, rows, W)
                     self.node_rows = self.node_rows.at[sel_ix].set(rows)
-                mix_bytes_total += mix_bytes
+                self.mix_bytes_total += mix_bytes
                 gap = graph_mod.spectral_gap(W)  # of the matrix actually applied
 
                 # ---- carbon + time accounting (training cost = sync's) --------
                 sel_mask, co2, dur = ctx.round_accounting(sel, t_hours)
-                cum_co2 += co2
+                self.cum_co2 += co2
 
                 # ---- evaluation (average model) + MARL update ------------------
                 if (rnd + 1) % train.eval_every == 0 or rnd == train.rounds - 1:
-                    acc = ctx.evaluate(self.mean_model(ctx))
-                consensus = gossip_mod.consensus_distance(self.node_rows)
-                r = ctx.policy_update(sel_mask, acc, dur, co2, inten)
-                co2_l.append(co2)
-                dur_l.append(dur)
-                gap_l.append(gap)
-                last_acc = acc
+                    self.acc = ctx.evaluate(self.mean_model(ctx))
+                self.consensus = gossip_mod.consensus_distance(self.node_rows)
+                r = ctx.policy_update(sel_mask, self.acc, dur, co2, inten)
+                self.co2_l.append(co2)
+                self.dur_l.append(dur)
+                self.gap_l.append(gap)
+                self.last_acc = self.acc
                 round_sp.set(co2_g=co2, bytes=mix_bytes)
                 emit(MixEvent(
-                    round=rnd, acc=acc, loss=float(np.mean(losses)) if losses else 0.0,
-                    co2_g=co2, cum_co2_g=cum_co2, duration_s=dur, reward=r,
+                    round=rnd, acc=self.acc, loss=float(np.mean(losses)) if losses else 0.0,
+                    co2_g=co2, cum_co2_g=self.cum_co2, duration_s=dur, reward=r,
                     eps_spent=0.0, selected=tuple(int(c) for c in sel),
-                    consensus=consensus, spectral_gap=gap,
+                    consensus=self.consensus, spectral_gap=gap,
                     mix_steps=topo.mixing_steps, mix_bytes=mix_bytes,
                 ))
+            self.start_round = rnd + 1
+            ctx.checkpoint_round(self, rnd)
         return {
-            "final_acc": last_acc,
-            "mean_co2_g": float(np.mean(co2_l)) if co2_l else 0.0,
-            "mean_duration_s": float(np.mean(dur_l)) if dur_l else 0.0,
-            "cum_co2_total_g": cum_co2,
-            "final_consensus": consensus,
-            "mean_spectral_gap": float(np.mean(gap_l)) if gap_l else 0.0,
-            "mix_bytes_total": mix_bytes_total,
+            "final_acc": self.last_acc,
+            "mean_co2_g": float(np.mean(self.co2_l)) if self.co2_l else 0.0,
+            "mean_duration_s": float(np.mean(self.dur_l)) if self.dur_l else 0.0,
+            "cum_co2_total_g": self.cum_co2,
+            "final_consensus": self.consensus,
+            "mean_spectral_gap": float(np.mean(self.gap_l)) if self.gap_l else 0.0,
+            "mix_bytes_total": self.mix_bytes_total,
         }

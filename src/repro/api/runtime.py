@@ -134,9 +134,47 @@ class RuntimeContext:
             self.round_flops = self._fallback_flops()
         self.model_bytes = float(self.pspace.nbytes)
         self.param_dim = self.pspace.dim
+        # fault tolerance: Federation.run(checkpoint=...) installs a
+        # CheckpointManager here; strategies call checkpoint_round per round
+        self.ckpt_manager = None
 
     def _fallback_flops(self) -> float:
         return 6.0 * self.pspace.dim * self.train.batch_size * self.train.local_steps
+
+    # ------------------------------------------------------------------
+    def checkpoint_round(self, strategy, rnd: int) -> None:
+        """Per-round checkpoint hook — a no-op unless ``Federation.run``
+        installed a manager.  Strategies call this *after* emitting the
+        round's event, so a checkpoint at round r implies rows 0..r already
+        reached every sink."""
+        if self.ckpt_manager is not None:
+            self.ckpt_manager.on_round(strategy, self, rnd)
+
+    def state_dict(self) -> dict:
+        """The context's mutable run state (the rest of the wiring is a pure
+        function of config + task and is rebuilt on resume)."""
+        from repro.checkpoint.state import pack_tree
+
+        s = {
+            "server_state": pack_tree(self.server_state),
+            "orch_state": pack_tree(self.orch_state),
+        }
+        if self.c_locals is not None:  # SCAFFOLD per-client control variates
+            s["c_locals"] = pack_tree(self.c_locals)
+        return s
+
+    def load_state_dict(self, s: dict) -> None:
+        from repro.checkpoint.state import unpack_tree
+
+        self.server_state = unpack_tree(s["server_state"], self.server_state)
+        self.orch_state = unpack_tree(s["orch_state"], self.orch_state)
+        if self.c_locals is not None:
+            if "c_locals" not in s:
+                raise ValueError(
+                    "checkpoint has no SCAFFOLD control variates but this run "
+                    "needs them — was it written by a different algorithm?"
+                )
+            self.c_locals = unpack_tree(s["c_locals"], self.c_locals)
 
     # ------------------------------------------------------------------
     def _cohort_inputs(self, sel, step: int, corrections=None):

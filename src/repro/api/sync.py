@@ -43,6 +43,45 @@ class SyncStrategy:
             if dp is not None and ctx.privacy.accounting == "per_region"
             else None
         )
+        # run-loop state lives on the strategy so a checkpoint can capture it
+        # mid-run; start_round > 0 means "resumed" and skips the initial eval
+        self.start_round = 0
+        self.co2_l: list[float] = []
+        self.dur_l: list[float] = []
+        self.cum_co2 = 0.0
+        self.acc: float = 0.0
+        self.last_acc: float = 0.0
+
+    # ------------------------------------------------------------------
+    def state_dict(self, ctx: RuntimeContext) -> dict:
+        """Everything the round loop needs to continue bitwise: the PRNG
+        chain position, accumulators, cached eval, accountant step log, and
+        the shared runtime state (server/orchestrator/control variates)."""
+        s = {
+            "rounds_done": self.start_round,
+            "key": np.asarray(self.key),
+            "co2_l": list(self.co2_l),
+            "dur_l": list(self.dur_l),
+            "cum_co2": self.cum_co2,
+            "acc": self.acc,
+            "last_acc": self.last_acc,
+            "runtime": ctx.state_dict(),
+        }
+        if self.accountant is not None:
+            s["accountant"] = self.accountant.state_dict()
+        return s
+
+    def load_state_dict(self, ctx: RuntimeContext, s: dict) -> None:
+        self.start_round = int(s["rounds_done"])
+        self.key = jnp.asarray(np.asarray(s["key"]))
+        self.co2_l = [float(v) for v in s["co2_l"]]
+        self.dur_l = [float(v) for v in s["dur_l"]]
+        self.cum_co2 = float(s["cum_co2"])
+        self.acc = float(s["acc"])
+        self.last_acc = float(s["last_acc"])
+        if self.accountant is not None:
+            self.accountant.load_state_dict(s["accountant"])
+        ctx.load_state_dict(s["runtime"])
 
     # ------------------------------------------------------------------
     def _record_privacy(self, ctx: RuntimeContext, records, n_sel: int) -> None:
@@ -71,13 +110,13 @@ class SyncStrategy:
     # ------------------------------------------------------------------
     def run(self, ctx: RuntimeContext, emit) -> dict:
         train, cfg = ctx.train, ctx.cfg
-        co2_l: list[float] = []
-        dur_l: list[float] = []
-        cum_co2 = 0.0
-        acc = ctx.evaluate(ctx.server_state.params)
-        last_acc = acc
+        if self.start_round == 0:
+            # fresh run; a resumed run restored the cached eval instead
+            # (evaluate has no PRNG side effects, so skipping it is safe)
+            self.acc = ctx.evaluate(ctx.server_state.params)
+            self.last_acc = self.acc
         tracer = ctx.tracer
-        for rnd in range(train.rounds):
+        for rnd in range(self.start_round, train.rounds):
             with tracer.span("round", round=rnd, strategy=self.name) as round_sp:
                 self.key, k_sel, k_int, k_agg, k_noise = jax.random.split(self.key, 5)
                 t_hours = rnd * cfg.carbon.round_hours
@@ -133,25 +172,27 @@ class SyncStrategy:
 
                 # ---- carbon + time accounting -------------------------------
                 sel_mask, co2, dur = ctx.round_accounting(sel, t_hours)
-                cum_co2 += co2
+                self.cum_co2 += co2
 
                 # ---- evaluation + MARL update --------------------------------
                 if (rnd + 1) % train.eval_every == 0 or rnd == train.rounds - 1:
-                    acc = ctx.evaluate(ctx.server_state.params)
-                r = ctx.policy_update(sel_mask, acc, dur, co2, inten)
+                    self.acc = ctx.evaluate(ctx.server_state.params)
+                r = ctx.policy_update(sel_mask, self.acc, dur, co2, inten)
                 eps_spent = self._spent_epsilon(ctx, rnd + 1)
-                co2_l.append(co2)
-                dur_l.append(dur)
-                last_acc = acc
+                self.co2_l.append(co2)
+                self.dur_l.append(dur)
+                self.last_acc = self.acc
                 round_sp.set(co2_g=co2, bytes=2 * len(sel) * ctx.model_bytes)
                 emit(RoundEvent(
-                    round=rnd, acc=acc, loss=float(np.mean(losses)) if losses else 0.0,
-                    co2_g=co2, cum_co2_g=cum_co2, duration_s=dur, reward=r,
+                    round=rnd, acc=self.acc, loss=float(np.mean(losses)) if losses else 0.0,
+                    co2_g=co2, cum_co2_g=self.cum_co2, duration_s=dur, reward=r,
                     eps_spent=eps_spent, selected=tuple(int(c) for c in sel),
                 ))
+            self.start_round = rnd + 1
+            ctx.checkpoint_round(self, rnd)
         return {
-            "final_acc": last_acc,
-            "mean_co2_g": float(np.mean(co2_l)) if co2_l else 0.0,
-            "mean_duration_s": float(np.mean(dur_l)) if dur_l else 0.0,
-            "cum_co2_total_g": cum_co2,
+            "final_acc": self.last_acc,
+            "mean_co2_g": float(np.mean(self.co2_l)) if self.co2_l else 0.0,
+            "mean_duration_s": float(np.mean(self.dur_l)) if self.dur_l else 0.0,
+            "cum_co2_total_g": self.cum_co2,
         }

@@ -1,0 +1,30 @@
+"""Checkpointing: bare-pytree snapshots (v1) + full federation state (v2).
+
+Two layers, one on-disk idiom (msgpack manifest + npz tensor store, written
+atomically via tmp-dir + ``os.replace`` so a torn write can never be mistaken
+for a valid checkpoint):
+
+* :mod:`repro.checkpoint.ckpt` — the v1 API: save/restore one pytree
+  (params, optimizer state) against a ``like`` template.  Still the right
+  tool for model-only snapshots, and unchanged for existing callers.
+* :mod:`repro.checkpoint.state` — the v2 *structured state* store:
+  arbitrarily nested dict/list containers with array leaves, self-describing
+  (no template needed to load), used to serialize the entire
+  ``FederationState`` — runtime + strategy + accountant + PRNG chain.
+* :mod:`repro.checkpoint.manager` — :class:`CheckpointPolicy`
+  (every-k-rounds / keep-last-n) and :class:`CheckpointManager`
+  (non-blocking background writes, retention, resume discovery), the piece
+  ``Federation.run(checkpoint=..., resume_from=...)`` drives.
+"""
+from repro.checkpoint import ckpt
+from repro.checkpoint.manager import (CheckpointManager, CheckpointPolicy,
+                                      latest_checkpoint, list_steps,
+                                      load_checkpoint, resume_key)
+from repro.checkpoint.state import (load_state, pack_tree, save_state,
+                                    snapshot, unpack_tree, write_snapshot)
+
+__all__ = [
+    "ckpt", "CheckpointManager", "CheckpointPolicy", "latest_checkpoint",
+    "list_steps", "load_checkpoint", "load_state", "pack_tree", "resume_key",
+    "save_state", "snapshot", "unpack_tree", "write_snapshot",
+]

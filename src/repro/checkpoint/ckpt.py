@@ -5,11 +5,18 @@ orchestrator Q-tables) with a manifest recording tree structure, dtypes and
 the sharding spec names — enough to restore onto a different mesh (the array
 data is saved unsharded; reloading applies the target mesh's NamedShardings).
 
+Writes are atomic: the store lands in a tmp directory and is published with
+``os.replace``, so a crash mid-save can never leave a torn directory that
+passes for a valid checkpoint.  ``restore`` validates the stored treedef,
+leaf names, dtypes and shapes against ``like`` — a structural or dtype
+mismatch raises instead of silently casting.
+
 Layout:  <dir>/manifest.msgpack  +  <dir>/arrays.npz
 """
 from __future__ import annotations
 
 import os
+import shutil
 from typing import Any, Optional
 
 import jax
@@ -29,48 +36,103 @@ def _flatten_with_names(tree: PyTree):
 
 
 def save(path: str, tree: PyTree, metadata: Optional[dict] = None) -> None:
-    os.makedirs(path, exist_ok=True)
+    from repro.checkpoint.state import atomic_replace_dir
+
     names, leaves, _ = _flatten_with_names(tree)
-    arrays = {f"a{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
-    np.savez(os.path.join(path, "arrays.npz"), **arrays)
-    manifest = {
-        "version": 1,
-        "names": names,
-        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
-        "shapes": [list(np.asarray(l).shape) for l in leaves],
-        "treedef": _treedef_repr(tree),
-        "metadata": metadata or {},
-    }
-    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
-        f.write(msgpack.packb(manifest))
+    tmp = f"{path}.tmp.{os.getpid()}"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+    try:
+        arrays = {f"a{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "version": 1,
+            "names": names,
+            "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+            "shapes": [list(np.asarray(l).shape) for l in leaves],
+            "treedef": _treedef_repr(tree),
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+            f.flush()
+            os.fsync(f.fileno())
+        atomic_replace_dir(tmp, path)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
 
 
 def _treedef_repr(tree: PyTree) -> str:
     return str(jax.tree_util.tree_structure(tree))
 
 
+def _read_manifest(path: str) -> dict:
+    manifest_path = os.path.join(path, "manifest.msgpack")
+    try:
+        with open(manifest_path, "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        if not isinstance(manifest, dict) or "names" not in manifest:
+            raise ValueError(f"not a checkpoint manifest: {manifest_path}")
+        return manifest
+    except (ValueError, FileNotFoundError):
+        raise
+    except Exception as e:  # torn/truncated msgpack payloads
+        raise ValueError(f"corrupt or incomplete checkpoint at {path}: {e}") from e
+
+
 def restore(path: str, like: PyTree, shardings: Optional[PyTree] = None) -> PyTree:
-    """Restore into the structure of ``like`` (names must match)."""
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
-    data = np.load(os.path.join(path, "arrays.npz"))
+    """Restore into the structure of ``like``.
+
+    The stored treedef, leaf names, dtypes and shapes must all match
+    ``like`` — a checkpoint written from a different structure (or a
+    template with drifted dtypes) raises ``ValueError`` rather than being
+    silently reinterpreted/cast.
+    """
+    manifest = _read_manifest(path)
+    try:
+        data = np.load(os.path.join(path, "arrays.npz"))
+    except FileNotFoundError:
+        raise
+    except Exception as e:  # truncated/torn zip payloads
+        raise ValueError(f"corrupt or incomplete checkpoint at {path}: {e}") from e
     names_new, leaves_like, treedef = _flatten_with_names(like)
     if names_new != manifest["names"]:
         missing = set(manifest["names"]) ^ set(names_new)
         raise ValueError(f"checkpoint/tree mismatch; differing leaves: {sorted(missing)[:8]}")
+    stored_treedef = manifest.get("treedef")
+    if stored_treedef is not None and stored_treedef != _treedef_repr(like):
+        raise ValueError(
+            f"treedef mismatch: checkpoint has {stored_treedef!r}, "
+            f"template has {_treedef_repr(like)!r}"
+        )
     out = []
     shard_leaves = jax.tree_util.tree_leaves(shardings) if shardings is not None else None
     for i, (leaf_like) in enumerate(leaves_like):
-        arr = data[f"a{i}"]
+        try:
+            arr = data[f"a{i}"]
+        except Exception as e:
+            raise ValueError(
+                f"corrupt or incomplete checkpoint at {path}: "
+                f"missing/unreadable array a{i} ({names_new[i]})"
+            ) from e
+        if str(arr.dtype) != manifest["dtypes"][i]:
+            raise ValueError(
+                f"dtype mismatch at {names_new[i]}: stored array is {arr.dtype}, "
+                f"manifest says {manifest['dtypes'][i]}"
+            )
+        if str(np.asarray(leaf_like).dtype) != manifest["dtypes"][i]:
+            raise ValueError(
+                f"dtype mismatch at {names_new[i]}: checkpoint has "
+                f"{manifest['dtypes'][i]}, template has {np.asarray(leaf_like).dtype}"
+            )
         if list(arr.shape) != list(leaf_like.shape):
             raise ValueError(f"shape mismatch at {names_new[i]}: {arr.shape} vs {leaf_like.shape}")
         if shard_leaves is not None:
-            out.append(jax.device_put(arr.astype(leaf_like.dtype), shard_leaves[i]))
+            out.append(jax.device_put(arr, shard_leaves[i]))
         else:
-            out.append(arr.astype(leaf_like.dtype))
+            out.append(arr)
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def metadata(path: str) -> dict:
-    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
-        return msgpack.unpackb(f.read())["metadata"]
+    return _read_manifest(path)["metadata"]

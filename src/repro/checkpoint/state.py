@@ -1,0 +1,218 @@
+"""Structured federation-state store: nested containers + array leaves.
+
+The v1 store (:mod:`repro.checkpoint.ckpt`) serializes one pytree against a
+``like`` template — right for params/optimizer snapshots, wrong for the full
+``FederationState``, which is a heterogeneous container: PRNG keys next to
+Python counters, per-region buffer lists of packed ``BufferEntry`` dicts,
+accountant step logs, float accumulators.  This module stores such
+containers **self-describingly** (no template needed to load):
+
+* ``snapshot(state)`` walks the container and produces a decoupled host copy
+  — a fresh dict/list skeleton with every array leaf replaced by an
+  ``{"__ndarray__": i}`` placeholder plus the list of host ``np.ndarray``
+  copies.  The copy is what makes background checkpointing race-free: after
+  ``snapshot`` returns, the writer thread never touches live run state.
+* ``write_snapshot(path, snap)`` persists the skeleton as
+  ``manifest.msgpack`` and the arrays as ``arrays.npz``, written into a tmp
+  dir and atomically ``os.replace``d into place — a torn write can never be
+  mistaken for a valid checkpoint.
+* ``load_state(path)`` is the inverse; any parse/shape inconsistency raises
+  ``ValueError`` loudly instead of returning partial state.
+
+``pack_tree``/``unpack_tree`` bridge jax pytrees (server/optimizer state,
+MARL ``OrchestratorState``) into the container world: packing flattens with
+key paths, unpacking validates treedef + names + dtypes + shapes against a
+live template — the same strictness the v1 ``restore`` enforces.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.utils import PyTree
+
+#: reserved skeleton key marking an array placeholder
+ARRAY_KEY = "__ndarray__"
+#: reserved skeleton key marking a packed pytree (documentation/validation aid)
+TREE_KEY = "__pytree__"
+STATE_VERSION = 2
+
+
+# ----------------------------------------------------------------------
+# snapshot: live container -> decoupled host copy
+# ----------------------------------------------------------------------
+def _encode(obj: Any, arrays: list[np.ndarray]) -> Any:
+    if isinstance(obj, (jax.Array, np.ndarray, np.generic)):
+        # np.array(copy=True): the snapshot must not alias caller buffers —
+        # the background writer serializes it after the run moved on
+        arrays.append(np.array(np.asarray(obj)))
+        return {ARRAY_KEY: len(arrays) - 1}
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            if not isinstance(k, str):
+                raise TypeError(
+                    f"state dict keys must be str (msgpack round-trip), got {k!r}"
+                )
+            if k == ARRAY_KEY:
+                raise TypeError(f"{ARRAY_KEY!r} is a reserved state key")
+            out[k] = _encode(v, arrays)
+        return out
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v, arrays) for v in obj]
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        return obj
+    raise TypeError(f"unserializable leaf in federation state: {type(obj)!r}")
+
+
+def snapshot(state: Any) -> tuple[Any, list[np.ndarray]]:
+    """Decoupled host copy of ``state``: (skeleton, host arrays).
+
+    Synchronous and cheap relative to a round: jax leaves transfer to host,
+    containers/scalars are copied by value.  Hand the result to
+    :func:`write_snapshot` — possibly from another thread.
+    """
+    arrays: list[np.ndarray] = []
+    return _encode(state, arrays), arrays
+
+
+def _decode(obj: Any, arrays) -> Any:
+    if isinstance(obj, dict):
+        if set(obj) == {ARRAY_KEY}:
+            return arrays[f"a{obj[ARRAY_KEY]}"]
+        return {k: _decode(v, arrays) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v, arrays) for v in obj]
+    return obj
+
+
+# ----------------------------------------------------------------------
+# write/load: atomic msgpack + npz
+# ----------------------------------------------------------------------
+def atomic_replace_dir(tmp: str, final: str) -> None:
+    """Atomically publish directory ``tmp`` at ``final``.
+
+    ``os.replace`` cannot overwrite a non-empty directory, so an existing
+    ``final`` is renamed aside first and removed after the swap; a crash in
+    between leaves either the old or the new checkpoint fully intact.
+    """
+    old = final + ".old"
+    shutil.rmtree(old, ignore_errors=True)
+    if os.path.isdir(final):
+        os.replace(final, old)
+    os.replace(tmp, final)
+    shutil.rmtree(old, ignore_errors=True)
+
+
+def write_snapshot(path: str, snap: tuple[Any, list[np.ndarray]],
+                   metadata: Optional[dict] = None) -> None:
+    """Persist a :func:`snapshot` at ``path`` (a directory), atomically."""
+    skeleton, arrays = snap
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": a for i, a in enumerate(arrays)})
+        manifest = {
+            "version": STATE_VERSION,
+            "kind": "federation-state",
+            "n_arrays": len(arrays),
+            "skeleton": skeleton,
+            "metadata": metadata or {},
+        }
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+            f.flush()
+            os.fsync(f.fileno())
+        atomic_replace_dir(tmp, path)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def save_state(path: str, state: Any, metadata: Optional[dict] = None) -> None:
+    """Snapshot + write in one call (the synchronous convenience path)."""
+    write_snapshot(path, snapshot(state), metadata=metadata)
+
+
+def load_state(path: str) -> tuple[Any, dict]:
+    """Load ``(state, metadata)`` written by :func:`save_state`.
+
+    Torn or truncated files fail loudly: every parse error is re-raised as
+    ``ValueError`` naming the checkpoint, never returned as partial state.
+    """
+    manifest_path = os.path.join(path, "manifest.msgpack")
+    try:
+        with open(manifest_path, "rb") as f:
+            manifest = msgpack.unpackb(f.read(), strict_map_key=False)
+        if not isinstance(manifest, dict) or manifest.get("kind") != "federation-state":
+            raise ValueError(f"not a federation-state manifest: {manifest_path}")
+        if manifest.get("version") != STATE_VERSION:
+            raise ValueError(
+                f"unsupported state version {manifest.get('version')!r} "
+                f"(expected {STATE_VERSION}) in {manifest_path}"
+            )
+        arrays = np.load(os.path.join(path, "arrays.npz"))
+        if len(arrays.files) != manifest["n_arrays"]:
+            raise ValueError(
+                f"array count mismatch in {path}: manifest says "
+                f"{manifest['n_arrays']}, npz holds {len(arrays.files)}"
+            )
+        state = _decode(manifest["skeleton"], arrays)
+    except ValueError:
+        raise
+    except Exception as e:  # msgpack/zipfile/np errors on torn writes
+        raise ValueError(f"corrupt or incomplete checkpoint at {path}: {e}") from e
+    return state, manifest.get("metadata", {})
+
+
+# ----------------------------------------------------------------------
+# pytree bridge
+# ----------------------------------------------------------------------
+def pack_tree(tree: PyTree) -> dict:
+    """Pack a jax pytree into a plain container (treedef repr + named leaves)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {
+        TREE_KEY: str(treedef),
+        "leaves": {jax.tree_util.keystr(p): np.asarray(l) for p, l in flat},
+    }
+
+
+def unpack_tree(packed: dict, like: PyTree) -> PyTree:
+    """Rebuild a pytree from :func:`pack_tree` output, validated against
+    ``like``: treedef, leaf names, dtypes and shapes must all match —
+    a checkpoint from a different model/optimizer/config never restores
+    silently."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    if packed.get(TREE_KEY) != str(treedef):
+        raise ValueError(
+            f"treedef mismatch: checkpoint has {packed.get(TREE_KEY)!r}, "
+            f"template has {str(treedef)!r}"
+        )
+    stored = packed["leaves"]
+    names = [jax.tree_util.keystr(p) for p, _ in flat]
+    if set(names) != set(stored):
+        missing = sorted(set(names) ^ set(stored))
+        raise ValueError(f"leaf-name mismatch; differing leaves: {missing[:8]}")
+    out = []
+    for name, (_, leaf_like) in zip(names, flat):
+        arr = np.asarray(stored[name])
+        like_arr = np.asarray(leaf_like)
+        if arr.dtype != like_arr.dtype:
+            raise ValueError(
+                f"dtype mismatch at {name}: {arr.dtype} vs {like_arr.dtype}"
+            )
+        if arr.shape != like_arr.shape:
+            raise ValueError(
+                f"shape mismatch at {name}: {arr.shape} vs {like_arr.shape}"
+            )
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

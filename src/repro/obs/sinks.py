@@ -32,13 +32,44 @@ EVENT_TYPES: dict[str, type] = {
 
 
 class JsonlSink:
-    """Streams the event stream to ``path``, one JSON line per event."""
+    """Streams the event stream to ``path``, one JSON line per event.
 
-    def __init__(self, path: str, *, fsync: bool = False):
+    ``append=True`` opens the log for appending instead of truncating —
+    the resume mode: a checkpointed run records the sink's byte offset
+    (:meth:`tell`) alongside the federation state, and on resume the file
+    is cut back to that offset (:meth:`truncate_to`) before the re-run
+    rounds append, so the log stays exactly one event per round with no
+    duplicates from the partially-completed post-checkpoint rounds.
+    """
+
+    def __init__(self, path: str, *, fsync: bool = False, append: bool = False):
         self.path = path
         self.fsync = fsync
+        self.append = append
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-        self._f: Optional[TextIO] = open(path, "w")
+        self._f: Optional[TextIO] = open(path, "a" if append else "w")
+        if append:
+            self._f.seek(0, os.SEEK_END)
+
+    def tell(self) -> int:
+        """Current end-of-log byte offset (every event is flushed on emit)."""
+        if self._f is None:
+            raise ValueError(f"JsonlSink({self.path!r}) is closed")
+        self._f.flush()
+        return self._f.tell()
+
+    def truncate_to(self, offset: int) -> None:
+        """Cut the log back to ``offset`` bytes (resume-from-checkpoint)."""
+        if self._f is None:
+            raise ValueError(f"JsonlSink({self.path!r}) is closed")
+        self._f.flush()
+        if offset > os.path.getsize(self.path):
+            raise ValueError(
+                f"cannot truncate {self.path!r} to {offset}: file is shorter "
+                f"({os.path.getsize(self.path)} bytes) — wrong log for this checkpoint?"
+            )
+        self._f.truncate(offset)
+        self._f.seek(offset)
 
     def emit(self, event: RoundEvent) -> None:
         if self._f is None:

@@ -114,6 +114,37 @@ class SubsampledAccountant:
                 [rdp_sampled_gaussian(key[0], key[1], a) for a in ALPHA_GRID]
             )
 
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Serializable step log: exactly the (q, sigma) -> count table.
+
+        The floats pass through the container store bit-exactly, so an
+        accountant restored via :meth:`load_state_dict` reports the *same*
+        epsilon it would have reported uninterrupted (the RDP cache is a
+        pure function of the step log and is rebuilt on restore).
+        """
+        return {
+            "delta": self.delta,
+            "steps": [[q, sigma, n] for (q, sigma), n in self._counts.items()],
+            "unbounded": self._unbounded,
+        }
+
+    def load_state_dict(self, s: dict) -> None:
+        if float(s["delta"]) != self.delta:
+            raise ValueError(
+                f"accountant delta mismatch: checkpoint has {s['delta']}, "
+                f"this run uses {self.delta}"
+            )
+        self._counts = {}
+        self._rdp_cache = {}
+        self._unbounded = bool(s["unbounded"])
+        for q, sigma, n in s["steps"]:
+            key = (float(q), float(sigma))
+            self._counts[key] = int(n)
+            self._rdp_cache[key] = np.asarray(
+                [rdp_sampled_gaussian(key[0], key[1], a) for a in ALPHA_GRID]
+            )
+
     def epsilon(self) -> float:
         """(eps, self.delta) guarantee of everything recorded so far."""
         if self._unbounded:

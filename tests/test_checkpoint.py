@@ -1,15 +1,23 @@
-"""Checkpoint save/restore roundtrip."""
+"""Checkpoint stores: v1 pytree save/restore, the self-describing
+federation-state store, crash-safety (torn writes fail loudly, previous
+checkpoints survive), and the CheckpointManager policy/retention layer."""
+import glob
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import ckpt
-from repro.configs import base as cfg_base
-from repro.models import transformer as tf
+from repro.checkpoint import (CheckpointManager, CheckpointPolicy, ckpt,
+                              latest_checkpoint, list_steps, load_checkpoint,
+                              load_state, resume_key, save_state)
 
 
 def test_roundtrip_params(tmp_path):
+    from repro.configs import base as cfg_base
+    from repro.models import transformer as tf
+
     cfg = cfg_base.get("qwen3-0.6b").reduced()
     params = tf.init_model(jax.random.PRNGKey(0), cfg)
     ckpt.save(str(tmp_path / "c1"), params, metadata={"arch": cfg.name, "round": 7})
@@ -27,3 +35,159 @@ def test_restore_rejects_mismatch(tmp_path):
         ckpt.restore(str(tmp_path / "c2"), {"b": jnp.ones(3)})
     with pytest.raises(ValueError):
         ckpt.restore(str(tmp_path / "c2"), {"a": jnp.ones(4)})
+
+
+def test_restore_rejects_dtype_drift(tmp_path):
+    """A template whose dtype drifted from the stored manifest must raise —
+    restoring f32 weights into an i32 slot is never a silent cast."""
+    ckpt.save(str(tmp_path / "c3"), {"a": jnp.ones(3, jnp.float32)})
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        ckpt.restore(str(tmp_path / "c3"), {"a": jnp.ones(3, jnp.int32)})
+
+
+def test_restore_rejects_treedef_mismatch(tmp_path):
+    """Same leaf names, different container structure (list vs tuple):
+    the stored treedef is compared, not just the name set."""
+    ckpt.save(str(tmp_path / "c4"), {"a": [jnp.ones(2), jnp.zeros(2)]})
+    with pytest.raises(ValueError, match="treedef mismatch"):
+        ckpt.restore(str(tmp_path / "c4"), {"a": (jnp.ones(2), jnp.zeros(2))})
+
+
+def test_save_overwrites_atomically(tmp_path):
+    """Re-saving to the same path swaps the directory whole: the new values
+    land, and no tmp/old staging dirs are left behind."""
+    path = str(tmp_path / "c5")
+    ckpt.save(path, {"a": jnp.zeros(3)})
+    ckpt.save(path, {"a": jnp.full((3,), 7.0)})
+    back = ckpt.restore(path, {"a": jnp.zeros(3)})
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.full((3,), 7.0))
+    leftovers = [p for p in glob.glob(path + "*") if p != path]
+    assert leftovers == []
+
+
+@pytest.mark.parametrize("victim", ["arrays.npz", "manifest.msgpack"])
+def test_truncated_store_fails_loudly(tmp_path, victim):
+    """A file torn mid-write (the crash window atomic publish protects
+    against, simulated here) must raise ValueError, never partial state."""
+    path = str(tmp_path / "c6")
+    ckpt.save(path, {"a": jnp.arange(64, dtype=jnp.float32)})
+    fpath = os.path.join(path, victim)
+    with open(fpath, "r+b") as f:
+        f.truncate(os.path.getsize(fpath) // 2)
+    with pytest.raises(ValueError, match="corrupt|incomplete|manifest"):
+        ckpt.restore(path, {"a": jnp.arange(64, dtype=jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# v2: the self-describing federation-state store
+# ---------------------------------------------------------------------------
+def test_state_roundtrip_heterogeneous_container(tmp_path):
+    state = {
+        "strategy": "sync",
+        "rounds_done": 3,
+        "key": np.arange(2, dtype=np.uint32),
+        "co2_l": [1.5, 2.25, -0.5],
+        "nested": {"rows": np.ones((2, 4), np.float32), "flag": True,
+                   "nothing": None, "tag": "edge-0"},
+        "entries": [{"row": np.zeros(3, np.float16), "version": 9}],
+    }
+    path = str(tmp_path / "s1")
+    save_state(path, state, metadata={"round": 3})
+    back, meta = load_state(path)
+    assert meta == {"round": 3}
+    assert back["strategy"] == "sync" and back["rounds_done"] == 3
+    assert back["nested"]["flag"] is True and back["nested"]["nothing"] is None
+    assert back["co2_l"] == state["co2_l"]
+    np.testing.assert_array_equal(back["key"], state["key"])
+    assert back["key"].dtype == np.uint32
+    np.testing.assert_array_equal(back["entries"][0]["row"],
+                                  state["entries"][0]["row"])
+    assert back["entries"][0]["row"].dtype == np.float16
+
+
+def test_state_rejects_unserializable(tmp_path):
+    with pytest.raises(TypeError, match="keys must be str"):
+        save_state(str(tmp_path / "s2"), {1: np.ones(2)})
+    with pytest.raises(TypeError, match="reserved"):
+        save_state(str(tmp_path / "s2"), {"__ndarray__": 0})
+    with pytest.raises(TypeError, match="unserializable"):
+        save_state(str(tmp_path / "s2"), {"f": object()})
+
+
+@pytest.mark.parametrize("victim", ["arrays.npz", "manifest.msgpack"])
+def test_truncated_state_fails_loudly_previous_survives(tmp_path, victim):
+    """Tear the newest step mid-file: loading it raises, and the previously
+    retained step still loads — the resume fallback contract."""
+    mgr_dir = str(tmp_path / "mgr")
+    save_state(os.path.join(mgr_dir, "round_00000000"), {"x": np.arange(3)},
+               metadata={"round": 0})
+    save_state(os.path.join(mgr_dir, "round_00000001"), {"x": np.arange(4)},
+               metadata={"round": 1})
+    fpath = os.path.join(mgr_dir, "round_00000001", victim)
+    with open(fpath, "r+b") as f:
+        f.truncate(os.path.getsize(fpath) // 2)
+    with pytest.raises(ValueError, match="corrupt|incomplete|manifest"):
+        load_state(os.path.join(mgr_dir, "round_00000001"))
+    state, meta = load_checkpoint(mgr_dir)  # newest loadable wins
+    assert meta["round"] == 0
+    np.testing.assert_array_equal(state["x"], np.arange(3))
+
+
+# ---------------------------------------------------------------------------
+# manager: policy cadence, retention, background writes
+# ---------------------------------------------------------------------------
+class _DummyStrategy:
+    name = "dummy"
+
+    def state_dict(self, ctx):
+        return {"x": np.arange(3) + ctx.round_offset}
+
+
+class _DummyCtx:
+    def __init__(self):
+        from repro import api
+
+        self.cfg = api.ExperimentConfig()
+        self.round_offset = 0
+
+
+def test_manager_cadence_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "mgr"),
+                            CheckpointPolicy(every_k_rounds=2, keep_last_n=2),
+                            background=False)
+    strat, ctx = _DummyStrategy(), _DummyCtx()
+    for rnd in range(6):
+        ctx.round_offset = rnd
+        mgr.on_round(strat, ctx, rnd)
+    assert mgr.saved_rounds == [1, 3, 5]          # (rnd+1) % 2 == 0
+    assert [r for r, _ in list_steps(mgr.directory)] == [3, 5]  # pruned to 2
+    assert latest_checkpoint(mgr.directory).endswith("round_00000005")
+    state, meta = load_checkpoint(mgr.directory)
+    assert meta["round"] == 5 and state["strategy"] == "dummy"
+    np.testing.assert_array_equal(state["state"]["x"], np.arange(3) + 5)
+    assert meta["resume_key"] == resume_key(ctx.cfg)
+
+
+def test_manager_background_writes_drain_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "mgr"), CheckpointPolicy())
+    strat, ctx = _DummyStrategy(), _DummyCtx()
+    for rnd in range(3):
+        ctx.round_offset = rnd
+        mgr.on_round(strat, ctx, rnd)
+    mgr.wait()
+    assert [r for r, _ in list_steps(mgr.directory)] == [0, 1, 2]
+    state, meta = load_checkpoint(mgr.directory)
+    np.testing.assert_array_equal(state["state"]["x"], np.arange(3) + 2)
+
+
+def test_resume_key_ignores_rounds_and_checkpoint_block(tmp_path):
+    from repro import api
+
+    a = api.ExperimentConfig()
+    b = api.ExperimentConfig(
+        training=api.TrainingConfig(rounds=999),
+        checkpoint=api.CheckpointConfig(directory=str(tmp_path), every_k_rounds=5),
+    )
+    assert resume_key(a) == resume_key(b)
+    c = api.ExperimentConfig(training=api.TrainingConfig(client_lr=0.123))
+    assert resume_key(a) != resume_key(c)

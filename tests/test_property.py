@@ -7,6 +7,7 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: skip cleanly, don't break collection
 from hypothesis import given, settings, strategies as st
 
+from repro.checkpoint import load_state, pack_tree, save_state, unpack_tree
 from repro.fl.paramspace import ParamSpace
 from repro.privacy import quantize, secure_agg
 from repro.topo import graph as topo_graph
@@ -219,3 +220,102 @@ def test_stochastic_rounding_unbiased(k, seed):
     mean = acc / trials
     step = quantize.quant_error_bound(1.0, 10)
     assert np.max(np.abs(mean - np.clip(0.1234567 * k, -1, 1))) < step
+
+
+# -- federation-state store: save -> load is the identity -------------------
+# (the fault-tolerance contract: ANY strategy state container round-trips
+# bitwise through the msgpack+npz checkpoint store)
+
+_STATE_DTYPES = (np.float32, np.float16, np.int32, np.uint32)
+
+_state_scalars = st.one_of(
+    st.none(), st.booleans(),
+    st.integers(min_value=-(2**60), max_value=2**60),
+    st.floats(allow_nan=False),       # inf round-trips; NaN breaks == by design
+    st.text(max_size=12),
+)
+
+
+@st.composite
+def _state_arrays(draw):
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    shape = draw(_leaf_shape)
+    dtype = draw(st.sampled_from(_STATE_DTYPES))
+    if np.issubdtype(dtype, np.integer):
+        info = np.iinfo(dtype)
+        return rng.integers(info.min, info.max, shape, dtype=dtype, endpoint=True)
+    return rng.normal(0, 2, shape).astype(dtype)
+
+
+_state_keys = st.text(max_size=8).filter(lambda k: k != "__ndarray__")
+
+_state_containers = st.recursive(
+    st.one_of(_state_scalars, _state_arrays()),
+    lambda kids: st.one_of(
+        st.lists(kids, max_size=4),
+        st.dictionaries(_state_keys, kids, max_size=4),
+    ),
+    max_leaves=12,
+)
+
+
+def _state_eq(a, b):
+    """Structural equality after a store round-trip (tuples load as lists;
+    array identity is dtype + shape + bitwise values)."""
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        a, b = np.asarray(a), np.asarray(b)
+        return a.dtype == b.dtype and a.shape == b.shape and np.array_equal(a, b)
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and set(a) == set(b)
+                and all(_state_eq(a[k], b[k]) for k in a))
+    if isinstance(a, (list, tuple)):
+        return (isinstance(b, (list, tuple)) and len(a) == len(b)
+                and all(_state_eq(x, y) for x, y in zip(a, b)))
+    return type(a) is type(b) and a == b
+
+
+@given(_state_containers, st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=20, deadline=None)
+def test_state_store_roundtrip_identity(tmp_path_factory, state, rnd):
+    path = str(tmp_path_factory.getbasetemp() / "state-prop")
+    save_state(path, state, metadata={"round": rnd})  # overwrites: atomic swap
+    back, meta = load_state(path)
+    assert meta == {"round": rnd}
+    assert _state_eq(state, back)
+
+
+@given(_pytrees())
+@settings(**SET)
+def test_pack_tree_roundtrip_identity(tree):
+    back = unpack_tree(pack_tree(tree), jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(
+    _pytrees(),
+    st.sampled_from(["dtype", "shape", "rename", "drop"]),
+    st.integers(min_value=0, max_value=10**6),
+)
+@settings(**SET)
+def test_unpack_tree_rejects_any_single_mutation(tree, mode, pick):
+    """Restore is all-or-nothing: mutating ANY one stored leaf (dtype, shape,
+    name, or presence) makes unpack_tree raise instead of restoring."""
+    packed = pack_tree(tree)
+    name = sorted(packed["leaves"])[pick % len(packed["leaves"])]
+    arr = packed["leaves"][name]
+    if mode == "dtype":
+        packed["leaves"][name] = arr.astype(
+            np.float64 if arr.dtype != np.float64 else np.float32
+        )
+    elif mode == "shape":
+        packed["leaves"][name] = np.concatenate(
+            [arr.reshape(-1), np.zeros(1, arr.dtype)]
+        )
+    elif mode == "rename":
+        packed["leaves"][name + "_x"] = packed["leaves"].pop(name)
+    else:
+        del packed["leaves"][name]
+    with pytest.raises(ValueError):
+        unpack_tree(packed, tree)

@@ -1,0 +1,269 @@
+"""Crash injection + bitwise resume for every strategy (fault tolerance).
+
+The contract under test: kill a run at round r, resume from the last
+checkpoint, and the resumed history is **bitwise identical** to what an
+uninterrupted run produced from round r+1 on — same PRNG draws, same
+selection, same losses, same CO2 floats, same DP epsilon.  Parametrized
+over sync / gossip / async_hier, with and without a DP + secure-agg
+pipeline (gossip rejects privacy pipelines by design, so it runs plain).
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import (CheckpointManager, CheckpointPolicy,
+                              latest_checkpoint, list_steps, load_checkpoint)
+from repro.data.partition import dirichlet_partition
+from repro.data.pipeline import build_clients
+from repro.data.synthetic import MNIST_LIKE, make_image_dataset
+from repro.models.resnet import ResNetConfig, init_resnet, resnet_loss
+from repro.obs.sinks import JsonlSink, read_events
+from repro.privacy.dp import DPConfig
+
+ROUNDS = 4
+KILL_AT = 2     # crash while round 2's event is being emitted
+EVERY_K = 2     # checkpoints land after rounds 1 and 3 -> crash leaves round 1
+
+
+class Boom(RuntimeError):
+    """The injected crash."""
+
+
+class CrashingSink:
+    """Aborts the run mid-emit at ``kill_at_round`` — after earlier sinks
+    (the durable event log) saw the event, but before the round's checkpoint
+    hook fires, like a real preemption landing at the worst moment."""
+
+    def __init__(self, kill_at_round: int):
+        self.kill_at_round = kill_at_round
+
+    def emit(self, event):
+        if event.round >= self.kill_at_round:
+            raise Boom(f"injected crash at round {event.round}")
+
+
+class ListSink:
+    def __init__(self):
+        self.events = []
+
+    def emit(self, event):
+        self.events.append(event)
+
+
+@pytest.fixture(scope="module")
+def make_task():
+    data = make_image_dataset(MNIST_LIKE, seed=1, n_train=256, n_test=64)
+    parts = dirichlet_partition(data["train"]["label"], 6, 0.5, seed=1)
+    clients = build_clients(data["train"], parts)
+    rcfg = ResNetConfig(name="t", widths=(8, 16), depths=(1, 1), in_channels=1,
+                        num_classes=10)
+    params = init_resnet(jax.random.PRNGKey(0), rcfg)
+
+    def _make():
+        return api.FederatedTask(
+            loss_fn=lambda p, b: resnet_loss(p, rcfg, b),
+            eval_fn=lambda p, b: resnet_loss(p, rcfg, b)[1],
+            params0=params, clients=clients, test_data=data["test"],
+        )
+
+    return _make
+
+
+def _cfg(mode: str, dp: bool, rounds: int = ROUNDS, ckpt_dir=None,
+         every: int = EVERY_K) -> api.ExperimentConfig:
+    dpc = DPConfig(clip=2.0, sigma=1.1, sample_rate=0.5, rounds=rounds) if dp else None
+    return api.ExperimentConfig(
+        training=api.TrainingConfig(
+            n_clients=6, clients_per_round=3, rounds=rounds, local_steps=2,
+            batch_size=16, eval_every=1, seed=3,
+        ),
+        privacy=api.PrivacyConfig(
+            secure_agg=dp, dp=dpc, accounting="per_region" if dp else "global",
+        ),
+        topology=api.TopologyConfig(
+            mode=mode,
+            n_regions=2 if mode == "async_hier" else 1,
+            buffer_k=2 if mode == "async_hier" else 0,
+        ),
+        orchestrator=api.OrchestratorConfig(selection="rl_green"),
+        checkpoint=api.CheckpointConfig(directory=ckpt_dir, every_k_rounds=every),
+    )
+
+
+def _assert_bitwise_tail(full: dict, resumed: dict, rc: int) -> None:
+    """Resumed history == the uninterrupted run from round rc+1, exactly.
+
+    Per-round columns are compared as tails; summary scalars/dicts must be
+    equal outright (accumulators are part of the checkpoint, so even
+    run-wide means are restored exactly).
+    """
+    assert sorted(resumed) == sorted(full)
+    for k, v in full.items():
+        if isinstance(v, list):
+            assert resumed[k] == v[rc + 1:], f"history column {k!r} diverged"
+        else:
+            assert resumed[k] == v, f"summary key {k!r} diverged"
+
+
+CASES = [
+    ("sync", False),
+    ("sync", True),
+    ("gossip", False),   # gossip rejects privacy pipelines by design
+    ("async_hier", False),
+    ("async_hier", True),
+]
+
+
+@pytest.mark.parametrize("mode,dp", CASES,
+                         ids=[f"{m}-{'dp_secagg' if d else 'plain'}" for m, d in CASES])
+def test_kill_resume_bitwise_history(tmp_path, make_task, mode, dp):
+    ckpt_dir = str(tmp_path / "ckpt")
+
+    # 1) the reference: an uninterrupted run of ROUNDS rounds
+    full = api.Federation(_cfg(mode, dp), make_task()).run()
+
+    # 2) the victim: checkpointing run, killed while emitting round KILL_AT
+    seen = ListSink()
+    fed = api.Federation(_cfg(mode, dp, ckpt_dir=ckpt_dir), make_task(),
+                         telemetry=[seen, CrashingSink(KILL_AT)])
+    with pytest.raises(Boom):
+        fed.run()
+    # determinism sanity: the crashed prefix matches the reference run
+    assert [e.acc for e in seen.events] == full["acc"][: KILL_AT + 1]
+    assert [e.loss for e in seen.events] == full["loss"][: KILL_AT + 1]
+
+    # the crash landed before round KILL_AT's checkpoint hook -> the last
+    # retained checkpoint is the one after round KILL_AT - 1
+    state, meta = load_checkpoint(ckpt_dir)
+    rc = meta["round"]
+    assert rc == KILL_AT - 1
+    assert meta["strategy"] == mode
+
+    # 3) resume into a fresh Federation; remaining rounds must replay bitwise
+    resumed = api.Federation(_cfg(mode, dp), make_task()).run(resume_from=ckpt_dir)
+    assert len(resumed["round"]) == ROUNDS - (rc + 1)
+    _assert_bitwise_tail(full, resumed, rc)
+    if dp:
+        # the resumed accountant composed the same step log: identical eps
+        assert resumed["eps_spent"] == full["eps_spent"][rc + 1:]
+        assert resumed["eps_spent"][-1] > 0.0
+
+
+def test_jsonl_event_log_resumes_cleanly(tmp_path, make_task):
+    """The checkpointed JsonlSink byte cursor + append-mode truncation give
+    one event per round across crash + resume — no duplicates, no gaps."""
+    log = str(tmp_path / "events.jsonl")
+    ckpt_dir = str(tmp_path / "ckpt")
+
+    full = api.Federation(_cfg("sync", False), make_task()).run()
+
+    fed = api.Federation(_cfg("sync", False, ckpt_dir=ckpt_dir), make_task(),
+                         telemetry=[JsonlSink(log), CrashingSink(KILL_AT)])
+    with pytest.raises(Boom):
+        fed.run()
+    # the crashed log holds rounds 0..KILL_AT (the sink ran before the crash)
+    assert [e.round for e in read_events(log)] == list(range(KILL_AT + 1))
+
+    resumed = api.Federation(
+        _cfg("sync", False), make_task(),
+        telemetry=[JsonlSink(log, append=True)],
+    ).run(resume_from=ckpt_dir)
+    events = read_events(log)
+    assert [e.round for e in events] == list(range(ROUNDS))
+    assert [e.acc for e in events] == full["acc"]
+    assert [e.cum_co2_g for e in events] == full["cum_co2_g"]
+    assert resumed["final_acc"] == full["final_acc"]
+
+
+def test_resume_with_more_rounds_extends_the_run(tmp_path, make_task):
+    """training.rounds is exempt from the resume config check: a finished
+    2-round checkpointed run continues to round 4 from its last snapshot."""
+    ckpt_dir = str(tmp_path / "ckpt")
+    api.Federation(_cfg("sync", False, rounds=2, ckpt_dir=ckpt_dir, every=1),
+                   make_task()).run()
+    assert latest_checkpoint(ckpt_dir).endswith("round_00000001")
+
+    full = api.Federation(_cfg("sync", False, rounds=4), make_task()).run()
+    extended = api.Federation(_cfg("sync", False, rounds=4), make_task()).run(
+        resume_from=ckpt_dir
+    )
+    assert extended["round"] == [2, 3]
+    assert extended["acc"] == full["acc"][2:]
+    assert extended["final_acc"] == full["final_acc"]
+
+
+def test_resume_rejects_wrong_strategy_or_config_drift(tmp_path, make_task):
+    ckpt_dir = str(tmp_path / "ckpt")
+    api.Federation(_cfg("sync", False, rounds=2, ckpt_dir=ckpt_dir, every=1),
+                   make_task()).run()
+
+    with pytest.raises(ValueError, match="strategy"):
+        api.Federation(_cfg("gossip", False, rounds=2), make_task()).run(
+            resume_from=ckpt_dir
+        )
+
+    drifted = _cfg("sync", False, rounds=2)
+    drifted.training.client_lr = 0.123  # trajectory-changing knob
+    with pytest.raises(ValueError, match="config mismatch"):
+        api.Federation(drifted, make_task()).run(resume_from=ckpt_dir)
+
+
+def test_checkpointing_requires_state_dict(tmp_path, make_task):
+    """Third-party strategies without state_dict still run — they just can't
+    be checkpointed, and asking for it fails up front, not at round k."""
+
+    class NullStrategy:
+        name = "null"
+        history_keys = ("round",)
+
+        def validate(self, cfg):
+            pass
+
+        def setup(self, ctx):
+            pass
+
+        def run(self, ctx, emit):
+            return {}
+
+    fed = api.Federation(_cfg("sync", False, rounds=1), make_task(),
+                         strategy=NullStrategy())
+    with pytest.raises(ValueError, match="cannot be checkpointed"):
+        fed.run(checkpoint=str(tmp_path / "ckpt"))
+
+
+def test_retention_prunes_old_steps(tmp_path, make_task):
+    """keep_last_n bounds the retained step dirs; the newest survive."""
+    ckpt_dir = str(tmp_path / "ckpt")
+    cfg = _cfg("sync", False, rounds=4, ckpt_dir=ckpt_dir, every=1)
+    cfg.checkpoint.keep_last_n = 2
+    fed = api.Federation(cfg, make_task())
+    fed.run()
+    assert [r for r, _ in list_steps(ckpt_dir)] == [2, 3]
+
+
+def test_corrupt_latest_falls_back_to_previous_checkpoint(tmp_path, make_task):
+    """A run killed mid-publish may leave its newest step torn: resume must
+    land on the last *loadable* checkpoint and still replay bitwise."""
+    ckpt_dir = str(tmp_path / "ckpt")
+    full = api.Federation(_cfg("sync", False), make_task()).run()
+    api.Federation(_cfg("sync", False, ckpt_dir=ckpt_dir, every=1),
+                   make_task()).run()
+
+    # tear the newest step's tensor payload mid-file
+    newest = latest_checkpoint(ckpt_dir)
+    npz = os.path.join(newest, "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    with pytest.raises(ValueError, match="corrupt|incomplete"):
+        load_checkpoint(newest)
+
+    state, meta = load_checkpoint(ckpt_dir)  # falls back: newest loadable
+    rc = meta["round"]
+    assert rc == ROUNDS - 2
+    resumed = api.Federation(_cfg("sync", False), make_task()).run(
+        resume_from=ckpt_dir
+    )
+    _assert_bitwise_tail(full, resumed, rc)

@@ -27,7 +27,9 @@ import numpy as np
 
 from benchmarks.common import csv_line
 from repro.fl.paramspace import ParamSpace
+from repro.kernels import compress as compress_mod
 from repro.kernels import ops, ref
+from repro.privacy import dp as dp_mod
 from repro.privacy import quantize, secure_agg
 from repro.topo import graph as topo_graph
 
@@ -42,11 +44,12 @@ def _backend(kernel: bool) -> str:
     return f"{base}:xla-ref"
 
 
-def _record(op: str, shape, us: float, bytes_moved: float, kernel: bool) -> None:
+def _record(op: str, shape, us: float, bytes_moved: float, kernel: bool,
+            backend: str | None = None) -> None:
     RECORDS.append({
         "op": op,
         "shape": list(shape),
-        "backend": _backend(kernel),
+        "backend": backend if backend is not None else _backend(kernel),
         "ms": us / 1e3,
         "gb_per_s": bytes_moved / (us * 1e-6) / 1e9 if us > 0 else 0.0,
     })
@@ -180,6 +183,86 @@ def bench_gossip_mix(k=16, P=262144, graph="torus"):
     ]
 
 
+def bench_compress(k=16, P=262144, bits=18, clip=1.0):
+    """Delta-to-wire hot path: fused clip+quantize+mask vs the staged stage
+    sequence (three separate dispatches with materialized intermediates —
+    exactly what ClipStage -> QuantizeStage -> MaskStage do per aggregate).
+
+    Both rows carry the SAME ``bytes_moved`` — the fused path's useful
+    traffic (rows read + pads read + ciphertext write) — so ``gb_per_s`` is
+    *delivered* bandwidth and its ordering equals the wall-time ordering:
+    the fused entry beats the staged one iff it is actually faster.  The
+    staged path additionally materializes ~4 more row-block traversals
+    (see ``repro.roofline.analysis.compress_traffic``).  Outputs are
+    asserted bitwise-equal before timing.
+    """
+    pspace = _row_space(P, seed=k)
+    rows_f = _stacked_rows(pspace, k, seed=3)
+    Pp = pspace.padded_dim
+    masks = secure_agg.mask_rows(jax.random.PRNGKey(11), k, Pp)
+
+    def staged(rows, masks):
+        # the three stage dispatches, one jit boundary each, as the pipeline runs them
+        clipped, _ = dp_mod.clip_rows(rows, clip)
+        q = quantize.encode(pspace.pad_rows(clipped), clip, bits)
+        return q + masks
+
+    fused = ops.clip_quant_mask(rows_f, masks, clip, bits, dim=pspace.dim)
+    expect = staged(rows_f, masks)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(expect))  # bitwise
+    us_f = _time(lambda: ops.clip_quant_mask(rows_f, masks, clip, bits, dim=pspace.dim))
+    us_s = _time(lambda: staged(rows_f, masks))
+    base = jax.default_backend()
+    bytes_moved = 3 * k * Pp * 4  # rows in + pads in + ciphertext out
+    _record("compress", (k, Pp), us_f, bytes_moved, kernel=True, backend=f"{base}:fused")
+    _record("compress", (k, Pp), us_s, bytes_moved, kernel=False, backend=f"{base}:staged")
+    out = [
+        csv_line(
+            f"compress_fused_k{k}_P{Pp}", us_f,
+            f"bytes={bytes_moved};bits={bits};bitwise_vs_staged=1;"
+            f"staged_over_fused_speedup={us_s / us_f:.2f}x",
+        ),
+        csv_line(f"compress_staged_k{k}_P{Pp}", us_s, "three_dispatches=1"),
+    ]
+    if ops.default_interpret() and k <= 8 and Pp <= 65536:
+        # the Pallas interpreter is ~100x XLA on CPU: time it at the small
+        # shape only, for parity visibility (not recorded — TPU runs record
+        # the Mosaic kernel through the fused entry above)
+        us_i = _time(
+            lambda: compress_mod.clip_quant_mask(
+                pspace.pad_rows(rows_f), masks, clip, bits,
+                dim=pspace.dim, interpret=True,
+            ),
+            reps=1,
+        )
+        out.append(csv_line(f"compress_pallas_interp_k{k}_P{Pp}", us_i,
+                            "interpreter_parity_only=1"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+def check_regression(baseline: list[dict], max_drop: float = 0.30) -> list[str]:
+    """Compare RECORDS against a committed baseline (the parsed JSON list):
+    any (op, shape, backend) whose GB/s dropped more than ``max_drop`` — or
+    disappeared from the bench — fails.  New ops absent from the baseline
+    pass (the refreshed JSON picks them up)."""
+    current = {(r["op"], tuple(r["shape"]), r["backend"]): r["gb_per_s"] for r in RECORDS}
+    failures = []
+    for b in baseline:
+        key = (b["op"], tuple(b["shape"]), b["backend"])
+        got = current.get(key)
+        if got is None:
+            failures.append(f"{key}: present in baseline but not benched")
+            continue
+        floor = b["gb_per_s"] * (1.0 - max_drop)
+        if got < floor:
+            failures.append(
+                f"{key}: {got:.3f} GB/s < floor {floor:.3f} "
+                f"(baseline {b['gb_per_s']:.3f}, max drop {max_drop:.0%})"
+            )
+    return failures
+
+
 def main(out_json: str | None = "BENCH_kernels.json"):
     RECORDS.clear()
     rows = []
@@ -191,6 +274,8 @@ def main(out_json: str | None = "BENCH_kernels.json"):
     rows += bench_staleness_agg(k=16, P=262144)
     rows += bench_gossip_mix(k=8, P=65536, graph="ring")
     rows += bench_gossip_mix(k=16, P=262144, graph="torus")
+    rows += bench_compress(k=8, P=65536)
+    rows += bench_compress(k=16, P=262144)
     for r in rows:
         print(r)
     if out_json:
@@ -204,5 +289,21 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default="BENCH_kernels.json",
                     help="machine-readable output path ('' disables)")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="regression mode: fail (exit 1) if any op's GB/s "
+                         "drops >30%% vs this committed baseline JSON")
     args = ap.parse_args()
+    baseline = None
+    if args.check:
+        # read BEFORE main(), which may rewrite the same path via --json
+        with open(args.check) as f:
+            baseline = json.load(f)
     main(out_json=args.json or None)
+    if baseline is not None:
+        failures = check_regression(baseline)
+        if failures:
+            print(f"PERF REGRESSION vs {args.check}:")
+            for f in failures:
+                print(f"  {f}")
+            raise SystemExit(1)
+        print(f"perf check vs {args.check}: OK ({len(RECORDS)} records)")

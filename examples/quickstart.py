@@ -18,6 +18,10 @@ continues from the newest checkpoint, replaying the remaining rounds
 bitwise.  ``--crash-at-round R`` SIGKILLs the run mid-round (the CI
 fault-injection hook); ``--history-out FILE`` dumps the history dict as
 JSON so crashed+resumed and uninterrupted runs can be diffed.
+
+``--topk 0.05`` switches to the sparsified DP pipeline: error-feedback
+top-k (keeping 5% of coordinates, residuals banked per client) feeding the
+one-pass fused clip+quantize+mask kernel and the Gaussian mechanism.
 """
 import argparse
 import json
@@ -28,6 +32,7 @@ import jax
 
 from repro import api, obs
 from repro.checkpoint import CheckpointManager, CheckpointPolicy
+from repro.privacy.dp import DPConfig
 from repro.data.partition import dirichlet_partition
 from repro.data.pipeline import build_clients
 from repro.data.synthetic import MNIST_LIKE, make_image_dataset
@@ -67,6 +72,10 @@ def main():
                     help="SIGKILL the process mid-round R (fault injection)")
     ap.add_argument("--history-out", metavar="FILE", default=None,
                     help="write the run's history dict as JSON")
+    ap.add_argument("--topk", type=float, default=0.0, metavar="DENSITY",
+                    help="run the sparsified DP path: error-feedback top-k "
+                         "keeping this fraction of coordinates, ahead of the "
+                         "fused clip+quantize+mask kernel and Gaussian noise")
     args = ap.parse_args()
 
     data = make_image_dataset(MNIST_LIKE, n_train=2000, n_test=400)
@@ -77,13 +86,23 @@ def main():
                         in_channels=1, num_classes=10)
     params = init_resnet(jax.random.PRNGKey(0), rcfg)
 
+    if args.topk:
+        # sparsified DP: EF top-k -> fused clip+quantize+mask -> Gaussian
+        # noise; the EF residual bank rides the checkpoint state, so this
+        # path is also what the resume smoke test kills and resumes
+        privacy = api.PrivacyConfig(
+            dp=DPConfig(clip=1.0, sigma=0.8, delta=1e-5, bits=18),
+            topk_density=args.topk,
+        )
+    else:
+        # uint32 one-time-pad masked aggregation (scale→quantize→mask stages)
+        privacy = api.PrivacyConfig(secure_agg=True)
     cfg = api.ExperimentConfig(
         training=api.TrainingConfig(
             algorithm="fedavg", n_clients=8, clients_per_round=3,
             rounds=args.rounds, local_steps=4, batch_size=16, eval_every=1,
         ),
-        # uint32 one-time-pad masked aggregation (scale→quantize→mask stages)
-        privacy=api.PrivacyConfig(secure_agg=True),
+        privacy=privacy,
         # the full MetaFed policy (Eq. 3-5, 9)
         orchestrator=api.OrchestratorConfig(selection="rl_green"),
     )

@@ -40,9 +40,12 @@ from repro.api.config import (CarbonConfig, CheckpointConfig, ExperimentConfig,
                               TrainingConfig)
 from repro.api.federation import (STRATEGIES, Federation, Strategy, build,
                                   register_strategy, strategy_names)
-from repro.api.pipeline import (AggregationContext, ClipStage, MaskStage,
-                                NoiseStage, PrivacyPipeline, QuantizeStage,
-                                ScaleStage, StageRecord, build_pipeline)
+from repro.api.pipeline import (AggregationContext, ClipStage,
+                                FusedCompressStage, MaskStage, NoiseStage,
+                                PrivacyPipeline, QuantizeStage, ScaleStage,
+                                StageRecord, TopKStage, build_pipeline,
+                                cohort_wire_bytes, fuse_pipeline,
+                                upload_bytes_per_client)
 from repro.api.runtime import FederatedTask, RuntimeContext
 from repro.api.telemetry import (CallbackSink, ConsoleSink, FlushEvent,
                                  HistoryRecorder, MixEvent, RoundEvent,
@@ -57,10 +60,12 @@ from repro.api.sync import SyncStrategy  # noqa: E402  isort: skip
 __all__ = [
     "AggregationContext", "AsyncHierStrategy", "build", "build_pipeline",
     "CallbackSink", "CarbonConfig", "CheckpointConfig", "ClipStage",
-    "ConsoleSink", "ExperimentConfig", "Federation", "FederatedTask", "FlushEvent",
+    "cohort_wire_bytes", "ConsoleSink", "ExperimentConfig", "Federation",
+    "FederatedTask", "FlushEvent", "fuse_pipeline", "FusedCompressStage",
     "GossipStrategy", "HistoryRecorder", "MaskStage", "MixEvent",
     "NoiseStage", "OrchestratorConfig", "PrivacyConfig", "PrivacyPipeline",
     "QuantizeStage", "register_strategy", "RoundEvent", "RuntimeContext",
     "ScaleStage", "StageRecord", "STRATEGIES", "Strategy", "strategy_names",
-    "SyncStrategy", "TelemetrySink", "TopologyConfig", "TrainingConfig",
+    "SyncStrategy", "TelemetrySink", "TopKStage", "TopologyConfig",
+    "TrainingConfig", "upload_bytes_per_client",
 ]

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import ExperimentConfig
+from repro.api.pipeline import cohort_wire_bytes
 from repro.api.runtime import RuntimeContext
 from repro.api.telemetry import ASYNC_HISTORY_KEYS, FlushEvent
 from repro.core import carbon as carbon_mod
@@ -342,7 +343,9 @@ class AsyncHierStrategy:
         reg.wave_flushes[trigger.wave] = n_prior + 1
         k_flush = trigger.k_agg if n_prior == 0 else jax.random.fold_in(trigger.k_agg, n_prior)
         with ctx.tracer.span("aggregate", region=reg.idx, cohort=len(entries)):
-            mean_row, records = ctx.aggregate(rows, eff_w, k_flush)
+            mean_row, records = ctx.aggregate(
+                rows, eff_w, k_flush, clients=[e.client for e in entries]
+            )
         reg.edge_params = ctx.pspace.add_to_tree(reg.edge_params, mean_row)
         reg.edge_accum = reg.edge_accum + mean_row
         reg.version += 1
@@ -377,7 +380,8 @@ class AsyncHierStrategy:
         reg.co2_g += co2
         flush_mask = np.zeros(reg.n, bool)
         flush_mask[[e.local for e in entries]] = True
-        return entries, taus, co2, dur, flush_mask
+        wire = cohort_wire_bytes(records, len(entries), ctx.model_bytes, ctx.param_dim)
+        return entries, taus, co2, dur, flush_mask, wire
 
     def _spent_epsilon(self, ctx: RuntimeContext, flushes: int) -> float:
         dp = ctx.privacy.dp
@@ -401,8 +405,8 @@ class AsyncHierStrategy:
         train = ctx.train
         while len(reg.buffer) >= self.buffer_k and self.flushes < train.rounds:
             with ctx.tracer.span("flush", region=reg.idx, flush=self.flushes) as fsp:
-                entries, taus, co2, dur, flush_mask = self._flush(ctx, reg, entry)
-                fsp.set(co2_g=co2, bytes=2 * len(entries) * ctx.model_bytes)
+                entries, taus, co2, dur, flush_mask, wire = self._flush(ctx, reg, entry)
+                fsp.set(co2_g=co2, bytes=wire)
             # straggler EMA: observed staleness per flushed client feeds
             # the MARL state so selection can demote chronic stragglers
             # (zero in the sync-equivalence regime -> no behavior change).
@@ -436,6 +440,7 @@ class AsyncHierStrategy:
                 eps_spent=self._spent_epsilon(ctx, self.flushes),
                 selected=tuple(e.client for e in entries),
                 staleness=stale, region=reg.idx, sim_time_s=self.now,
+                wire_bytes=wire,
             ))
             ctx.checkpoint_round(self, self.flushes - 1)
         if self.flushes < train.rounds:

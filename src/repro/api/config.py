@@ -59,6 +59,8 @@ class PrivacyConfig:
     sa_clip: float = 10.0         # ring clip for quantization (non-DP runs)
     dp: Optional[DPConfig] = None
     accounting: str = "global"    # global | per_region (subsampled-RDP per edge region)
+    topk_density: float = 0.0     # >0 -> EF top-k sparsification (fraction kept)
+    fuse: bool = True             # collapse clip->quantize->mask into one kernel pass
 
     def __post_init__(self):
         # the strategies only ever *compare* against "per_region", so a typo
@@ -66,6 +68,10 @@ class PrivacyConfig:
         if self.accounting not in ("global", "per_region"):
             raise ValueError(
                 f"unknown accounting {self.accounting!r}; use 'global' or 'per_region'"
+            )
+        if not (0.0 <= self.topk_density <= 1.0):
+            raise ValueError(
+                f"topk_density must be in [0, 1], got {self.topk_density}"
             )
 
 

@@ -66,11 +66,12 @@ class GossipStrategy:
                 "/ control variates / step normalization); gossip supports "
                 "'fedavg' and 'fedprox' local rules."
             )
-        if priv.secure_agg or priv.dp is not None:
+        if priv.secure_agg or priv.dp is not None or priv.topk_density > 0:
             raise ValueError(
-                "the privacy pipeline stages are server-side (they mask/noise "
-                "the aggregate) and gossip has no aggregation site; run "
-                "privacy experiments on the 'sync' or 'async_hier' strategies."
+                "the privacy pipeline stages are server-side (they "
+                "sparsify/mask/noise the aggregate) and gossip has no "
+                "aggregation site; run privacy experiments on the 'sync' or "
+                "'async_hier' strategies."
             )
         if train.sharded:
             raise ValueError(

@@ -5,11 +5,20 @@ The legacy engines hard-coded one aggregation chain in
 the composition decided by two config flags.  Here the chain is a
 :class:`PrivacyPipeline` of explicit stages over ``ParamSpace`` rows:
 
+    TopKStage      error-feedback top-k sparsification             [rows]
     ClipStage      per-client L2 clip (DP sensitivity bound)       [rows]
     ScaleStage     pre-scale rows by k·(n_i/Σn) (weighted masking) [rows]
     QuantizeStage  fixed-point encode into the uint32 ring         [rows]
     MaskStage      per-client one-time pads (dealer model)         [rows]
     NoiseStage     server-side Gaussian mechanism on the sum       [sum]
+
+    FusedCompressStage = ClipStage→QuantizeStage→MaskStage collapsed into
+    the one-pass ``clip_quant_mask`` Pallas kernel: one HBM read of the
+    cohort rows, one ciphertext write, bitwise the staged composition.  It
+    records the *same three* ``StageRecord``s (clip/quantize/mask), so the
+    accountant and every records consumer cannot tell the paths apart.
+    ``fuse_pipeline`` rewrites any matching composition;  ``build_pipeline``
+    applies it by default (``PrivacyConfig.fuse=False`` opts out).
 
 The executor applies row-scope stages in order, reduces (the fused
 ``masked_agg`` Pallas kernel when the rows were masked, a plain ring sum
@@ -69,6 +78,8 @@ class AggregationContext:
         key_mask,
         key_noise,
         weighted_sum: Callable,
+        clients=None,
+        residuals: Optional[jax.Array] = None,
     ):
         self.pspace = pspace
         self.k = int(k)
@@ -76,14 +87,26 @@ class AggregationContext:
         self.key_mask = key_mask
         self.key_noise = key_noise
         self.weighted_sum = weighted_sum
+        # cohort identity + the EF residual bank: TopKStage reads the rows
+        # for ``clients`` out of ``residuals`` ((n_clients, dim), strategy
+        # state) and writes the updated bank back here; the RuntimeContext
+        # commits it after the aggregate call.
+        self.clients = None if clients is None else np.asarray(clients, np.int32)
+        self.residuals = residuals
         self.ring: Optional[tuple[float, int]] = None  # (clip, bits) once quantized
         self.masks: Optional[jax.Array] = None
         self.records: list[StageRecord] = []
+        # normalized once: the round loop reads this per stage AND per
+        # reduction, and re-normalizing on every property access was a
+        # measurable constant in the hot loop
+        self._norm_weights = jnp.asarray(
+            self.weights / np.sum(self.weights), jnp.float32
+        )
 
     @property
     def norm_weights(self) -> jax.Array:
         """(k,) float32 data-size weights normalized to sum 1 (Eq. 6)."""
-        return jnp.asarray(self.weights / np.sum(self.weights), jnp.float32)
+        return self._norm_weights
 
     def record(self, stage: str, **info) -> None:
         self.records.append(StageRecord(stage, info))
@@ -92,6 +115,68 @@ class AggregationContext:
 # ---------------------------------------------------------------------------
 # Stages
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKStage:
+    """Error-feedback top-k sparsification (EF-SGD / memory-feedback line).
+
+    Each client keeps only the ``density·dim`` largest-magnitude coordinates
+    of (delta + residual) and banks the rest as its residual for the next
+    participation, so nothing is ever dropped — only delayed.  Exact
+    invariant (what the Hypothesis property pins):
+
+        sparse + residual_new = delta + residual_old       (per row)
+
+    The residual bank lives as ParamSpace rows in ``RuntimeContext`` state
+    ((n_clients, dim) float32), so it checkpoints and resumes bitwise with
+    the rest of the federation state.  Without a wired bank (hand-composed
+    pipelines outside a strategy) the stage degrades to plain one-shot
+    top-k (zero residual in, feedback discarded).
+
+    Placed *before* ClipStage: the clip then bounds the sensitivity of what
+    actually leaves the client (the sparse row), keeping DP accounting
+    untouched, and leaves the clip→quantize→mask suffix contiguous for
+    ``fuse_pipeline``.  The record carries (density, k_kept, index_bits) —
+    what wire-byte accounting needs to price the index+value encoding.
+    """
+
+    density: float
+    name = "topk"
+    scope = "rows"
+
+    def __post_init__(self):
+        if not (0.0 < self.density <= 1.0):
+            raise ValueError(f"topk density must be in (0, 1], got {self.density}")
+
+    def apply(self, rows: jax.Array, ctx: AggregationContext) -> jax.Array:
+        dim = rows.shape[1]
+        k_keep = max(1, int(round(self.density * dim)))
+        if ctx.residuals is not None:
+            if ctx.clients is None:
+                raise ValueError(
+                    "TopKStage has a residual bank but no cohort client ids; "
+                    "pass clients= to RuntimeContext.aggregate"
+                )
+            corrected = rows + ctx.residuals[ctx.clients]
+        else:
+            corrected = rows
+        # exact-k selection: scatter the top-k *indices* (distinct per row)
+        # rather than thresholding on the k-th value, so ties never widen
+        # the payload past what the wire record claims
+        _, idx = jax.lax.top_k(jnp.abs(corrected), k_keep)
+        keep = (
+            jnp.zeros(corrected.shape, bool)
+            .at[jnp.arange(corrected.shape[0])[:, None], idx]
+            .set(True)
+        )
+        sparse = jnp.where(keep, corrected, 0.0)
+        if ctx.residuals is not None:
+            # duplicate cohort entries for one client (possible in async
+            # flushes) follow scatter semantics: one entry's feedback wins
+            ctx.residuals = ctx.residuals.at[ctx.clients].set(corrected - sparse)
+        ctx.record(self.name, density=self.density, k_kept=k_keep, index_bits=32)
+        return sparse
 
 
 @dataclasses.dataclass(frozen=True)
@@ -158,6 +243,38 @@ class MaskStage:
 
 
 @dataclasses.dataclass(frozen=True)
+class FusedCompressStage:
+    """ClipStage → QuantizeStage → MaskStage as ONE pass over the rows.
+
+    Dispatches the fused ``clip_quant_mask`` kernel (``kernels/compress.py``):
+    per-row L2 norm + clip factor + fixed-point ring encode + one-time pad
+    with one HBM read of the cohort block and one ciphertext write, where
+    the staged composition traverses it six times.  Bitwise-identical to
+    the staged stages (interpret mode; pinned by tests/test_property.py),
+    and records the *same three* ``StageRecord``s in the same order, so DP
+    accounting and wire-byte pricing are unchanged by the fusion.
+    """
+
+    clip: float
+    bits: int
+    name = "fused_compress"
+    names = ("clip", "quantize", "mask")  # what this stage stands in for
+    scope = "rows"
+
+    def apply(self, rows: jax.Array, ctx: AggregationContext) -> jax.Array:
+        quantize.check_headroom(self.bits, ctx.k)
+        ctx.record("clip", clip=self.clip)
+        rows = ctx.pspace.pad_rows(rows)
+        ctx.ring = (self.clip, self.bits)
+        ctx.record("quantize", clip=self.clip, bits=self.bits)
+        ctx.masks = secure_agg.mask_rows(ctx.key_mask, ctx.k, rows.shape[1])
+        ctx.record("mask", ring_bits=quantize.RING_BITS)
+        return kernel_ops.clip_quant_mask(
+            rows, ctx.masks, self.clip, self.bits, dim=ctx.pspace.dim
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class NoiseStage:
     """Server-side Gaussian mechanism on the summed clipped rows.
 
@@ -209,7 +326,10 @@ class PrivacyPipeline:
             )
 
     def describe(self) -> list[str]:
-        return [s.name for s in self.stages]
+        """Logical stage names: fused stages expand to what they stand in
+        for (``FusedCompressStage`` -> clip, quantize, mask), so a fused
+        pipeline describes — like it records — exactly as the staged one."""
+        return [n for s in self.stages for n in getattr(s, "names", (s.name,))]
 
     def aggregate(self, rows: jax.Array, ctx: AggregationContext) -> jax.Array:
         """(k, P) delta rows -> (P,) MEAN row, recording every stage."""
@@ -241,26 +361,93 @@ class PrivacyPipeline:
         return summed if mean_scale == 1.0 else summed * mean_scale
 
 
+def fuse_pipeline(pipeline: PrivacyPipeline) -> PrivacyPipeline:
+    """Collapse every contiguous ClipStage → QuantizeStage → MaskStage run
+    (with a shared clip value) into a :class:`FusedCompressStage`.
+
+    Compositions that don't match — scale-based secure-agg, a stage wedged
+    between clip and quantize, clip values that disagree — are left on the
+    staged path untouched.  The rewrite changes neither ``describe()`` nor
+    the emitted ``StageRecord``s; only the number of HBM passes.
+    """
+    stages = list(pipeline.stages)
+    fused: list = []
+    i = 0
+    while i < len(stages):
+        s = stages[i]
+        if (
+            isinstance(s, ClipStage)
+            and i + 2 < len(stages)
+            and isinstance(stages[i + 1], QuantizeStage)
+            and isinstance(stages[i + 2], MaskStage)
+            and stages[i + 1].clip == s.clip
+        ):
+            fused.append(FusedCompressStage(s.clip, stages[i + 1].bits))
+            i += 3
+        else:
+            fused.append(s)
+            i += 1
+    if fused == stages:
+        return pipeline
+    return dataclasses.replace(pipeline, stages=tuple(fused))
+
+
+def upload_bytes_per_client(records, dim: int) -> float:
+    """Wire bytes of ONE client's upload, priced from the stage records.
+
+    The records say exactly what left the client: a ``topk`` record shrinks
+    the payload to ``k_kept`` (index, value) pairs; a ``quantize`` record
+    prices each value at its ring width (bit-packed) instead of float32.
+    No records -> a plain float32 row of ``dim`` values.
+    """
+    n_values = dim
+    value_bits = 32.0  # float32 unless a quantize record says otherwise
+    index_bytes = 0.0
+    for r in records:
+        if r.stage == "topk":
+            n_values = int(r.info["k_kept"])
+            index_bytes = n_values * r.info["index_bits"] / 8.0
+        elif r.stage == "quantize":
+            value_bits = float(r.info["bits"])
+    return n_values * value_bits / 8.0 + index_bytes
+
+
+def cohort_wire_bytes(records, cohort: int, model_bytes: float, dim: int) -> float:
+    """Total wire traffic of one aggregate call: per client, one full-model
+    download (float32) plus the record-priced upload.  With no compression
+    records this is exactly the legacy ``2 · cohort · model_bytes``."""
+    return cohort * (model_bytes + upload_bytes_per_client(records, dim))
+
+
 def build_pipeline(privacy) -> PrivacyPipeline:
     """Map a ``PrivacyConfig`` onto the canonical stage compositions.
 
     Reproduces the legacy ``Simulation._aggregate`` chains exactly:
 
-        dp set       : clip → quantize → mask → [kernel sum] → noise, /k
-        secure_agg   : scale → quantize → mask → [kernel sum], /k
-        neither      : [weighted-sum kernel]  (plain Eq. 6)
+        dp set       : [topk →] clip → quantize → mask → [kernel sum] → noise, /k
+        secure_agg   : [topk →] scale → quantize → mask → [kernel sum], /k
+        neither      : [topk →] [weighted-sum kernel]  (plain Eq. 6)
+
+    ``privacy.topk_density > 0`` prepends the EF sparsifier;
+    ``privacy.fuse`` (default) then collapses any clip→quantize→mask suffix
+    into the one-pass fused kernel — same records, same bits on the wire.
     """
+    topk = (TopKStage(privacy.topk_density),) if privacy.topk_density else ()
     if privacy.dp is not None:
         dp = privacy.dp
-        return PrivacyPipeline(
-            stages=(ClipStage(dp.clip), QuantizeStage(dp.clip, dp.bits),
-                    MaskStage(), NoiseStage(dp)),
+        pipe = PrivacyPipeline(
+            stages=topk + (ClipStage(dp.clip), QuantizeStage(dp.clip, dp.bits),
+                           MaskStage(), NoiseStage(dp)),
             weighting="uniform",
         )
+        return fuse_pipeline(pipe) if privacy.fuse else pipe
     if privacy.secure_agg:
         return PrivacyPipeline(
-            stages=(ScaleStage(), QuantizeStage(privacy.sa_clip, privacy.sa_bits),
-                    MaskStage()),
+            stages=topk + (ScaleStage(),
+                           QuantizeStage(privacy.sa_clip, privacy.sa_bits),
+                           MaskStage()),
             weighting="uniform",
         )
+    if topk:
+        return PrivacyPipeline(stages=topk, weighting="data")
     return PrivacyPipeline()

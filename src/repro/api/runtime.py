@@ -134,6 +134,16 @@ class RuntimeContext:
             self.round_flops = self._fallback_flops()
         self.model_bytes = float(self.pspace.nbytes)
         self.param_dim = self.pspace.dim
+        # EF top-k residual bank: one ParamSpace row per client, fed to and
+        # updated by TopKStage through each aggregate call.  Allocated only
+        # when the pipeline actually sparsifies; checkpointed with the rest
+        # of the run state so crash->resume replays EF bitwise.
+        if any(s.name == "topk" for s in self.pipeline.stages):
+            self.ef_residuals = jnp.zeros(
+                (train.n_clients, self.pspace.dim), jnp.float32
+            )
+        else:
+            self.ef_residuals = None
         # fault tolerance: Federation.run(checkpoint=...) installs a
         # CheckpointManager here; strategies call checkpoint_round per round
         self.ckpt_manager = None
@@ -161,6 +171,8 @@ class RuntimeContext:
         }
         if self.c_locals is not None:  # SCAFFOLD per-client control variates
             s["c_locals"] = pack_tree(self.c_locals)
+        if self.ef_residuals is not None:  # EF top-k residual bank
+            s["ef_residuals"] = pack_tree(self.ef_residuals)
         return s
 
     def load_state_dict(self, s: dict) -> None:
@@ -175,6 +187,13 @@ class RuntimeContext:
                     "needs them — was it written by a different algorithm?"
                 )
             self.c_locals = unpack_tree(s["c_locals"], self.c_locals)
+        if self.ef_residuals is not None:
+            if "ef_residuals" not in s:
+                raise ValueError(
+                    "checkpoint has no EF residual bank but this run sparsifies "
+                    "— was it written without topk_density set?"
+                )
+            self.ef_residuals = unpack_tree(s["ef_residuals"], self.ef_residuals)
 
     # ------------------------------------------------------------------
     def _cohort_inputs(self, sel, step: int, corrections=None):
@@ -224,7 +243,7 @@ class RuntimeContext:
 
     # ------------------------------------------------------------------
     def aggregate(
-        self, rows: jax.Array, weights, key
+        self, rows: jax.Array, weights, key, clients=None
     ) -> tuple[jax.Array, list[StageRecord]]:
         """Run the privacy pipeline over (k, P) delta rows -> (MEAN row, records).
 
@@ -233,14 +252,21 @@ class RuntimeContext:
         pytree form only reappears at the server-update boundary.  The
         records tell the caller exactly which stages ran (the accountant
         reads the ``noise`` record's sigma).
+
+        ``clients``: cohort client ids aligned with ``rows`` — required when
+        the pipeline sparsifies, so ``TopKStage`` reads/writes the right rows
+        of the EF residual bank; the updated bank is committed back here.
         """
         # independent streams for the one-time-pad masks and the DP noise —
         # reusing one key would correlate the pads with the Gaussian draw
         k_mask, k_noise = jax.random.split(key)
         actx = AggregationContext(
-            self.pspace, len(weights), weights, k_mask, k_noise, self.weighted_sum
+            self.pspace, len(weights), weights, k_mask, k_noise,
+            self.weighted_sum, clients=clients, residuals=self.ef_residuals,
         )
         mean_row = self.pipeline.aggregate(rows, actx)
+        if self.ef_residuals is not None:
+            self.ef_residuals = actx.residuals
         return mean_row, actx.records
 
     def weighted_sum(self, rows: jax.Array, w) -> jax.Array:

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.config import ExperimentConfig
+from repro.api.pipeline import cohort_wire_bytes
 from repro.api.runtime import RuntimeContext
 from repro.api.telemetry import SYNC_HISTORY_KEYS, RoundEvent
 from repro.core import carbon as carbon_mod
@@ -160,10 +161,17 @@ class SyncStrategy:
                     if train.algorithm == "fednova":
                         deltas = [ctx.pspace.unravel(res.rows[j]) for j in range(len(sel))]
                         mean_delta = server_mod.fednova_mean_delta(deltas, weights, list(res.n_steps))
+                        # float32 rows both ways — no pipeline records to price
+                        wire = 2 * len(sel) * ctx.model_bytes
                     else:
-                        mean_row, records = ctx.aggregate(res.rows, weights, k_agg)
+                        mean_row, records = ctx.aggregate(
+                            res.rows, weights, k_agg, clients=sel
+                        )
                         mean_delta = ctx.pspace.unravel(mean_row)
                         self._record_privacy(ctx, records, len(sel))
+                        wire = cohort_wire_bytes(
+                            records, len(sel), ctx.model_bytes, ctx.param_dim
+                        )
                     ctx.server_state = ctx.server_apply(ctx.server_state, mean_delta)
                     if train.algorithm == "scaffold" and c_deltas:
                         ctx.server_state = server_mod.scaffold_update_c(
@@ -182,11 +190,12 @@ class SyncStrategy:
                 self.co2_l.append(co2)
                 self.dur_l.append(dur)
                 self.last_acc = self.acc
-                round_sp.set(co2_g=co2, bytes=2 * len(sel) * ctx.model_bytes)
+                round_sp.set(co2_g=co2, bytes=wire)
                 emit(RoundEvent(
                     round=rnd, acc=self.acc, loss=float(np.mean(losses)) if losses else 0.0,
                     co2_g=co2, cum_co2_g=self.cum_co2, duration_s=dur, reward=r,
                     eps_spent=eps_spent, selected=tuple(int(c) for c in sel),
+                    wire_bytes=wire,
                 ))
             self.start_round = rnd + 1
             ctx.checkpoint_round(self, rnd)

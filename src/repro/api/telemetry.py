@@ -35,6 +35,10 @@ class RoundEvent:
     reward: float
     eps_spent: float
     selected: tuple[int, ...]
+    # true wire traffic of the event's aggregate, priced from the privacy
+    # pipeline's StageRecords (ring bits, top-k density) — 0.0 means "not
+    # priced" and consumers fall back to the 2·|cohort|·model_bytes estimate
+    wire_bytes: float = 0.0
 
     def history_row(self) -> dict:
         """The legacy per-round history columns this event carries."""
@@ -43,6 +47,7 @@ class RoundEvent:
             "cum_co2_g": self.cum_co2_g, "duration_s": self.duration_s,
             "reward": self.reward, "loss": self.loss,
             "eps_spent": self.eps_spent, "selected": list(self.selected),
+            "wire_bytes": self.wire_bytes,
         }
 
 

@@ -56,6 +56,31 @@ def gossip_mix_ref(rows, mixing):
     )
 
 
+def clip_quant_mask_ref(rows, masks, clip: float, bits: int, dim=None):
+    """Reference fused delta-to-wire compression (one XLA expression).
+
+    rows: (k, P) float32 block-padded delta rows, masks: (k, P) uint32
+    one-time pads.  Returns uint32 (k, P) ciphertext:
+
+        encode( clip_L2(row, c) ) + pad   (mod 2^32)
+
+    ``dim`` bounds the norm reduction to the valid (unpadded) columns.
+    Bitwise-identical to the staged ClipStage -> QuantizeStage -> MaskStage
+    composition AND to the Pallas kernel in interpret mode: the expressions
+    (and reduction lengths) are kept exactly the stages' own.
+    """
+    rows = rows.astype(jnp.float32)
+    dim = rows.shape[1] if dim is None else int(dim)
+    norms = jnp.sqrt(
+        jnp.sum(jnp.square(rows[:, :dim]), axis=-1, keepdims=True)
+    )
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+    qscale = ((1 << (bits - 1)) - 1) / clip
+    v = jnp.clip(rows * scale, -clip, clip) * qscale
+    q = jnp.round(v).astype(jnp.int32).astype(jnp.uint32)
+    return q + masks
+
+
 def masked_aggregate_ref(masked, masks, clip: float, bits: int):
     """Reference fused unmask+dequantize.
 

@@ -11,8 +11,10 @@ protocol and folds the typed event stream into aggregates the paper's
 claims are stated in:
 
     bytes_moved         wire traffic: gossip mixing bytes (``MixEvent``)
-                        plus, when ``model_bytes`` is set, the 2·|cohort|
-                        model transfers of every server round/flush
+                        plus each server round/flush's record-priced
+                        ``wire_bytes`` (quantization + top-k aware), falling
+                        back to 2·|cohort|·``model_bytes`` float32 transfers
+                        for events that don't carry a priced payload
     co2_g_total         cumulative emissions (plus a per-region breakdown
                         from ``FlushEvent.region``)
     eps_spent           the privacy budget spent so far (gauge)
@@ -168,12 +170,22 @@ class MetricsSink:
             reg.counter(f"co2_g_total[region={event.region}]").inc(event.co2_g)
             reg.histogram("staleness").observe(event.staleness)
             reg.gauge("sim_time_s").set(event.sim_time_s)
-            if self.model_bytes:
-                reg.counter("bytes_moved").inc(2 * len(event.selected) * self.model_bytes)
+            self._server_bytes(event)
         else:
             reg.counter("rounds").inc()
-            if self.model_bytes:
-                reg.counter("bytes_moved").inc(2 * len(event.selected) * self.model_bytes)
+            self._server_bytes(event)
+
+    def _server_bytes(self, event: RoundEvent) -> None:
+        """Wire traffic of one server round/flush: the event's record-priced
+        ``wire_bytes`` when the strategy supplied it (true payload sizes
+        under quantization/sparsification), else the legacy float32 estimate
+        of 2 transfers per selected client."""
+        if event.wire_bytes:
+            self.registry.counter("bytes_moved").inc(event.wire_bytes)
+        elif self.model_bytes:
+            self.registry.counter("bytes_moved").inc(
+                2 * len(event.selected) * self.model_bytes
+            )
 
     # convenience passthroughs so a sink can be finalized without reaching in
     def snapshot(self) -> dict:

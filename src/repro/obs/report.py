@@ -130,10 +130,12 @@ def summarize_events(events: list) -> dict:
             s["final_consensus"] = e.consensus
         elif isinstance(e, FlushEvent):
             s["flushes"] += 1
+            s["bytes_moved"] += getattr(e, "wire_bytes", 0.0)
             reg = s["co2_by_region_g"]
             reg[e.region] = reg.get(e.region, 0.0) + e.co2_g
         else:
             s["rounds"] += 1
+            s["bytes_moved"] += getattr(e, "wire_bytes", 0.0)
     return s
 
 

@@ -103,6 +103,49 @@ def analyze(
     )
 
 
+def compress_traffic(k: int, P: int, bits: int = 20,
+                     density: float = 1.0) -> dict:
+    """HBM-traffic model of delta-to-wire compression on a (k, P) cohort —
+    the bandwidth argument behind ``kernels/compress.py``.
+
+    Staged path (ClipStage -> QuantizeStage -> MaskStage, each a separate
+    XLA/Pallas dispatch over the full block):
+
+        clip      read f32 rows + write f32 rows          2·k·P·4
+        quantize  read f32 rows + write u32 rows          2·k·P·4
+        mask      read u32 rows + read u32 pads + write   3·k·P·4
+
+    Fused kernel: read f32 rows + read u32 pads + write u32 ciphertext
+    = ``3·k·P·4`` — the norm re-read happens inside VMEM, not HBM.  Both
+    paths are far under the compute roof (a handful of FLOPs per byte), so
+    the traffic ratio *is* the predicted speedup on a memory-bound part.
+
+    ``bits``/``density`` also price the resulting wire payload per client
+    (bit-packed ring values; top-k keeps ``density·P`` (index, value)
+    pairs), matching ``repro.api.pipeline.upload_bytes_per_client``.
+    """
+    if k < 1 or P < 1:
+        raise ValueError(f"need k, P >= 1, got k={k}, P={P}")
+    if not (0.0 < density <= 1.0):
+        raise ValueError(f"density must be in (0, 1], got {density}")
+    block = k * P * 4.0
+    staged = 7.0 * block
+    fused = 3.0 * block
+    kept = max(1, int(round(density * P)))
+    wire = kept * bits / 8.0 + (kept * 4.0 if density < 1.0 else 0.0)
+    return {
+        "k": k, "P": P, "bits": bits, "density": density,
+        "staged_hbm_bytes": staged,
+        "fused_hbm_bytes": fused,
+        "traffic_ratio": staged / fused,
+        "predicted_speedup": staged / fused,  # memory-bound: ratio == speedup
+        "staged_s": staged / C.HBM_BW,
+        "fused_s": fused / C.HBM_BW,
+        "wire_bytes_per_client": wire,
+        "wire_vs_float32": wire / (P * 4.0),
+    }
+
+
 def save_report(report: RooflineReport, path: str) -> None:
     with open(path, "w") as f:
         json.dump(report.to_dict(), f, indent=1)

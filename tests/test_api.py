@@ -277,6 +277,117 @@ def test_mask_stage_requires_quantize():
 
 
 # ---------------------------------------------------------------------------
+# Fused compression, EF top-k, and wire-byte pricing
+# ---------------------------------------------------------------------------
+
+
+def test_build_pipeline_fuses_dp_composition():
+    dp = DPConfig(clip=1.0, sigma=1.0)
+    pipe = api.build_pipeline(api.PrivacyConfig(dp=dp))
+    assert [s.name for s in pipe.stages] == ["fused_compress", "noise"]
+    # fusion is invisible outside: describe() expands to the staged names
+    assert pipe.describe() == ["clip", "quantize", "mask", "noise"]
+    staged = api.build_pipeline(api.PrivacyConfig(dp=dp, fuse=False))
+    assert [s.name for s in staged.stages] == ["clip", "quantize", "mask", "noise"]
+    # scale-based secure-agg doesn't match clip->quantize->mask: stays staged
+    sa = api.build_pipeline(api.PrivacyConfig(secure_agg=True))
+    assert [s.name for s in sa.stages] == ["scale", "quantize", "mask"]
+
+
+def test_build_pipeline_inserts_ef_topk_ahead_of_compression():
+    dp = DPConfig(clip=1.0, sigma=1.0)
+    pipe = api.build_pipeline(api.PrivacyConfig(dp=dp, topk_density=0.1))
+    assert [s.name for s in pipe.stages] == ["topk", "fused_compress", "noise"]
+    assert pipe.describe() == ["topk", "clip", "quantize", "mask", "noise"]
+    # plain top-k without DP/masking keeps data weighting (Eq. 6)
+    plain = api.build_pipeline(api.PrivacyConfig(topk_density=0.25))
+    assert plain.describe() == ["topk"] and plain.weighting == "data"
+    with pytest.raises(ValueError, match="topk_density"):
+        api.PrivacyConfig(topk_density=1.5)
+    with pytest.raises(ValueError, match="density"):
+        api.TopKStage(0.0)
+
+
+def test_fuse_pipeline_leaves_non_matching_compositions_alone():
+    clip, q, m = api.ClipStage(1.0), api.QuantizeStage(clip=1.0, bits=16), api.MaskStage()
+    fused = api.fuse_pipeline(
+        api.PrivacyPipeline(stages=(clip, q, m), weighting="uniform"))
+    assert [s.name for s in fused.stages] == ["fused_compress"]
+    # clip values disagree -> fusing would change the ring encoding: refuse
+    q2 = api.QuantizeStage(clip=2.0, bits=16)
+    kept = api.fuse_pipeline(
+        api.PrivacyPipeline(stages=(clip, q2, m), weighting="uniform"))
+    assert [s.name for s in kept.stages] == ["clip", "quantize", "mask"]
+    # no clip ahead of quantize -> no match (and the input object is reused)
+    p = api.PrivacyPipeline(stages=(q, m), weighting="uniform")
+    assert api.fuse_pipeline(p) is p
+
+
+def test_wire_byte_pricing_from_stage_records():
+    dim = 1000
+    # plain run: float32 row up, full model down == legacy 2 transfers/client
+    assert api.upload_bytes_per_client([], dim) == dim * 4.0
+    assert api.cohort_wire_bytes([], 3, dim * 4.0, dim) == 2 * 3 * dim * 4.0
+    # ring quantization prices each value at its bit width, not float32
+    quant = [api.StageRecord("quantize", {"clip": 1.0, "bits": 18})]
+    assert api.upload_bytes_per_client(quant, dim) == dim * 18 / 8.0
+    # top-k shrinks the payload to k_kept (index, value) pairs
+    recs = [api.StageRecord("topk", {"density": 0.05, "k_kept": 50, "index_bits": 32}),
+            api.StageRecord("clip", {"clip": 1.0}),
+            api.StageRecord("quantize", {"clip": 1.0, "bits": 18}),
+            api.StageRecord("mask", {"ring_bits": 32})]
+    assert api.upload_bytes_per_client(recs, dim) == 50 * 18 / 8.0 + 50 * 4.0
+
+
+def test_metrics_sink_prefers_record_priced_wire_bytes():
+    from repro.obs.metrics import MetricsSink
+
+    ev = dict(round=0, acc=0.5, loss=1.0, co2_g=1.0, cum_co2_g=1.0,
+              duration_s=1.0, reward=0.0, eps_spent=0.0, selected=(0, 1, 2))
+    priced = MetricsSink(model_bytes=1000.0)
+    priced.emit(api.RoundEvent(**ev, wire_bytes=123.5))
+    assert priced.snapshot()["bytes_moved"] == 123.5
+    # no priced payload on the event -> legacy 2-transfers/client estimate
+    legacy = MetricsSink(model_bytes=1000.0)
+    legacy.emit(api.RoundEvent(**ev))
+    assert legacy.snapshot()["bytes_moved"] == 2 * 3 * 1000.0
+
+
+def test_aggregation_context_precomputes_norm_weights():
+    pspace, _ = _pspace_and_rows()
+    ctx = _row_ctx(pspace, 4, [1.0, 2.0, 3.0, 4.0])
+    np.testing.assert_allclose(np.asarray(ctx.norm_weights),
+                               [0.1, 0.2, 0.3, 0.4], rtol=1e-7)
+    assert ctx.norm_weights is ctx.norm_weights  # cached, not rebuilt per read
+
+
+def test_gossip_rejects_sparsified_pipelines():
+    _, _, _, _, _, task = _setup()
+    cfg = api.ExperimentConfig(
+        training=api.TrainingConfig(**_BASE),
+        privacy=api.PrivacyConfig(topk_density=0.1),
+        topology=api.TopologyConfig(mode="gossip"),
+    )
+    with pytest.raises(ValueError, match="sparsify"):
+        api.Federation(cfg, task)
+
+
+def test_privacy_config_round_trips_compression_knobs():
+    cfg = api.ExperimentConfig(
+        training=api.TrainingConfig(**_BASE),
+        privacy=api.PrivacyConfig(dp=DPConfig(clip=1.0, sigma=1.0),
+                                  topk_density=0.05, fuse=False),
+    )
+    back = api.ExperimentConfig.from_dict(json.loads(json.dumps(cfg.to_dict())))
+    assert back.privacy.topk_density == 0.05 and back.privacy.fuse is False
+    # older configs without the new knobs load with the defaults
+    d = cfg.to_dict()
+    d["privacy"].pop("topk_density"), d["privacy"].pop("fuse")
+    old = api.ExperimentConfig.from_dict(d)
+    assert old.privacy.topk_density == 0.0 and old.privacy.fuse is True
+
+
+# ---------------------------------------------------------------------------
 # Per-region subsampled accountant
 # ---------------------------------------------------------------------------
 

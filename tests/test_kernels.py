@@ -7,7 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import compress as compress_mod
 from repro.kernels import ops, ref
+from repro.privacy import dp as dp_mod
 from repro.privacy import quantize, secure_agg
 
 
@@ -76,3 +78,88 @@ def test_masked_agg_kernel(n, P, bits):
     # and the decoded result matches the true float sum within quant error
     bound = quantize.quant_error_bound(1.0, bits) * n + 1e-6
     np.testing.assert_allclose(np.asarray(out), ups.sum(0), atol=bound)
+
+
+def _staged_compress(rows, masks, clip, bits, dim):
+    """The exact ClipStage -> QuantizeStage -> MaskStage ops over pre-padded
+    rows: the fused kernel's bitwise ground truth (dim = unpadded columns)."""
+    clipped, _ = dp_mod.clip_rows(rows[:, :dim], clip)
+    padded = jnp.pad(clipped, ((0, 0), (0, rows.shape[1] - dim)))
+    return quantize.encode(padded, clip, bits) + masks
+
+
+# (k, dim, P, clip, bits) — P is the block-padded width, dim the true one
+COMPRESS_CASES = [
+    (3, 1000, 1024, 1.0, 16),
+    (8, 5000, 6144, 0.5, 20),     # padded-dim case: norm must stop at dim
+    (16, 2048, 2048, 10.0, 24),   # aligned: dim == P
+    (5, 7777, 8192, 2.0, 18),
+    (1, 123, 256, 0.25, 12),      # single row, tiny dim
+]
+
+
+@pytest.mark.parametrize("k,dim,P,clip,bits", COMPRESS_CASES)
+def test_clip_quant_mask_bitwise_vs_staged(k, dim, P, clip, bits):
+    """Pallas interpret mode AND the fused XLA ref reproduce the staged
+    stage composition bit-for-bit (uint32 ciphertexts compare exactly)."""
+    rng = np.random.default_rng(k * 31 + bits)
+    rows = np.zeros((k, P), np.float32)
+    rows[:, :dim] = rng.normal(0, clip, (k, dim)).astype(np.float32)
+    rows = jnp.asarray(rows)
+    masks = secure_agg.mask_rows(jax.random.PRNGKey(3), k, P)
+    expect = np.asarray(_staged_compress(rows, masks, clip, bits, dim))
+
+    pallas = compress_mod.clip_quant_mask(rows, masks, clip, bits, dim=dim,
+                                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(pallas), expect)
+    fused_ref = ref.clip_quant_mask_ref(rows, masks, clip, bits, dim=dim)
+    np.testing.assert_array_equal(np.asarray(fused_ref), expect)
+    # the public dispatcher (CPU -> fused XLA, TPU -> Mosaic) agrees too
+    dispatched = ops.clip_quant_mask(rows, masks, clip, bits, dim=dim)
+    np.testing.assert_array_equal(np.asarray(dispatched), expect)
+
+
+def test_clip_quant_mask_roundtrips_through_masked_agg():
+    """compress -> masked_aggregate recovers the clipped float sum within
+    the ring's quantization error (the full wire round trip)."""
+    k, dim, P, clip, bits = 6, 3000, 4096, 1.0, 20
+    rng = np.random.default_rng(0)
+    rows = np.zeros((k, P), np.float32)
+    rows[:, :dim] = rng.normal(0, 0.05, (k, dim)).astype(np.float32)
+    rows = jnp.asarray(rows)
+    masks = secure_agg.mask_rows(jax.random.PRNGKey(5), k, P)
+    cipher = ops.clip_quant_mask(rows, masks, clip, bits, dim=dim)
+    dec = np.asarray(ops.masked_aggregate(cipher, masks, clip, bits))
+    clipped, _ = dp_mod.clip_rows(rows[:, :dim], clip)
+    bound = quantize.quant_error_bound(clip, bits) * k + 1e-6
+    np.testing.assert_allclose(dec[:dim], np.asarray(clipped).sum(0), atol=bound)
+
+
+def test_clip_quant_mask_validates_shapes():
+    rows = jnp.zeros((2, 64), jnp.float32)
+    with pytest.raises(ValueError, match="masks shape"):
+        compress_mod.clip_quant_mask(rows, jnp.zeros((3, 64), jnp.uint32), 1.0, 16)
+    with pytest.raises(ValueError, match="dim"):
+        compress_mod.clip_quant_mask(rows, jnp.zeros((2, 64), jnp.uint32), 1.0, 16, dim=65)
+
+
+def test_compress_traffic_roofline_model():
+    """The bandwidth argument for the fused kernel: 7 vs 3 HBM traversals,
+    and the wire pricing matches ``upload_bytes_per_client`` semantics."""
+    from repro.roofline.analysis import compress_traffic
+
+    t = compress_traffic(k=16, P=262144, bits=18)
+    assert t["staged_hbm_bytes"] == 7 * 16 * 262144 * 4.0
+    assert t["fused_hbm_bytes"] == 3 * 16 * 262144 * 4.0
+    assert t["predicted_speedup"] == pytest.approx(7 / 3)
+    assert t["fused_s"] < t["staged_s"]
+    # dense ring: bit-packed values only, no index stream
+    assert t["wire_bytes_per_client"] == 262144 * 18 / 8.0
+    sp = compress_traffic(k=16, P=262144, bits=18, density=0.05)
+    kept = round(0.05 * 262144)
+    assert sp["wire_bytes_per_client"] == kept * 18 / 8.0 + kept * 4.0
+    assert sp["wire_vs_float32"] < 0.1
+    with pytest.raises(ValueError, match="density"):
+        compress_traffic(4, 1024, density=0.0)
+    with pytest.raises(ValueError, match="k, P"):
+        compress_traffic(0, 1024)

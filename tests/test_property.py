@@ -7,8 +7,12 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dep: skip cleanly, don't break collection
 from hypothesis import given, settings, strategies as st
 
+from repro.api.pipeline import (AggregationContext, ClipStage, MaskStage,
+                                PrivacyPipeline, QuantizeStage, TopKStage,
+                                fuse_pipeline)
 from repro.checkpoint import load_state, pack_tree, save_state, unpack_tree
 from repro.fl.paramspace import ParamSpace
+from repro.kernels import compress as compress_mod
 from repro.privacy import quantize, secure_agg
 from repro.topo import graph as topo_graph
 from repro.utils import clip_by_global_norm, tree_ravel, tree_unravel
@@ -156,6 +160,95 @@ def test_tree_ravel_roundtrip(seed):
     back = tree_unravel(td, flat)
     for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# -- fused delta-to-wire compression (kernels/compress.py) ------------------
+
+
+def _flat_space(dim: int) -> ParamSpace:
+    return ParamSpace.build({"w": jnp.zeros((dim,), jnp.float32)})
+
+
+@given(
+    st.integers(min_value=1, max_value=9),          # cohort size k
+    st.integers(min_value=2, max_value=6000),       # dim (unpadded params)
+    st.floats(min_value=0.05, max_value=20.0),      # clip
+    st.integers(min_value=10, max_value=24),        # ring bits
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+)
+@settings(max_examples=15, deadline=None)
+def test_fused_compress_bitwise_equals_staged_stages(k, dim, clip, bits, seed):
+    """The fused Pallas kernel (interpret mode) IS the staged ClipStage ->
+    QuantizeStage -> MaskStage composition, bit for bit, through the real
+    pipeline executor — same ciphertext, same StageRecords."""
+    ps = _flat_space(dim)
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.normal(0, clip, (k, dim)).astype(np.float32))
+    stages = (ClipStage(clip), QuantizeStage(clip, bits), MaskStage())
+    staged = PrivacyPipeline(stages, weighting="uniform")
+    fused = fuse_pipeline(staged)
+    assert [s.name for s in fused.stages] == ["fused_compress"]
+    assert fused.describe() == staged.describe()
+
+    def run_rows(pipe):
+        ctx = AggregationContext(
+            ps, k, [1.0] * k, jax.random.PRNGKey(seed % 997),
+            jax.random.PRNGKey(1), lambda r, w: jnp.einsum("kp,k->p", r, w),
+        )
+        out = rows
+        for s in pipe.stages:
+            out = s.apply(out, ctx)
+        return np.asarray(out), ctx.records, ctx.masks
+
+    c_staged, rec_staged, masks = run_rows(staged)
+    c_fused, rec_fused, _ = run_rows(fused)
+    np.testing.assert_array_equal(c_fused, c_staged)
+    assert rec_fused == rec_staged
+    # and the Pallas interpreter itself agrees with both
+    interp = compress_mod.clip_quant_mask(
+        ps.pad_rows(rows), masks, clip, bits, dim=dim, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(interp), c_staged)
+
+
+@given(
+    st.integers(min_value=1, max_value=8),          # cohort size k
+    st.integers(min_value=2, max_value=3000),       # dim
+    st.floats(min_value=0.01, max_value=1.0),       # density
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+    st.integers(min_value=1, max_value=5),          # participation rounds
+)
+@settings(max_examples=15, deadline=None)
+def test_ef_topk_residuals_preserve_mean(k, dim, density, seed, rounds):
+    """Error feedback drops nothing: after any number of participations,
+    what was sent plus what is still banked equals everything that was ever
+    produced — so mean(compressed) + mean(residual_delta) == mean(delta)."""
+    ps = _flat_space(dim)
+    rng = np.random.default_rng(seed)
+    stage = TopKStage(density)
+    clients = np.arange(k, dtype=np.int32)
+    residuals = jnp.zeros((k, dim), jnp.float32)
+    sent_total = np.zeros(dim, np.float64)
+    delta_total = np.zeros(dim, np.float64)
+    for r in range(rounds):
+        deltas = jnp.asarray(rng.normal(0, 1, (k, dim)).astype(np.float32))
+        ctx = AggregationContext(
+            ps, k, [1.0] * k, jax.random.PRNGKey(0), jax.random.PRNGKey(1),
+            lambda rw, w: jnp.einsum("kp,k->p", rw, w),
+            clients=clients, residuals=residuals,
+        )
+        sparse = stage.apply(deltas, ctx)
+        residuals = ctx.residuals
+        # per-round exact invariant: sparse + residual_new = delta + residual_old
+        sent_total += np.asarray(sparse, np.float64).mean(0)
+        delta_total += np.asarray(deltas, np.float64).mean(0)
+        (rec,) = [x for x in ctx.records if x.stage == "topk"]
+        assert rec.info["k_kept"] == max(1, round(density * dim))
+        nnz = np.count_nonzero(np.asarray(sparse), axis=1)
+        assert (nnz <= rec.info["k_kept"]).all()  # zeros in top-k stay zero
+    residual_mean = np.asarray(residuals, np.float64).mean(0)
+    np.testing.assert_allclose(sent_total + residual_mean, delta_total,
+                               rtol=1e-4, atol=1e-4)
 
 
 # -- mixing-matrix invariants (repro.topo) ----------------------------------

@@ -73,7 +73,7 @@ def make_task():
 
 
 def _cfg(mode: str, dp: bool, rounds: int = ROUNDS, ckpt_dir=None,
-         every: int = EVERY_K) -> api.ExperimentConfig:
+         every: int = EVERY_K, topk: float = 0.0) -> api.ExperimentConfig:
     dpc = DPConfig(clip=2.0, sigma=1.1, sample_rate=0.5, rounds=rounds) if dp else None
     return api.ExperimentConfig(
         training=api.TrainingConfig(
@@ -82,6 +82,7 @@ def _cfg(mode: str, dp: bool, rounds: int = ROUNDS, ckpt_dir=None,
         ),
         privacy=api.PrivacyConfig(
             secure_agg=dp, dp=dpc, accounting="per_region" if dp else "global",
+            topk_density=topk,
         ),
         topology=api.TopologyConfig(
             mode=mode,
@@ -109,25 +110,28 @@ def _assert_bitwise_tail(full: dict, resumed: dict, rc: int) -> None:
 
 
 CASES = [
-    ("sync", False),
-    ("sync", True),
-    ("gossip", False),   # gossip rejects privacy pipelines by design
-    ("async_hier", False),
-    ("async_hier", True),
+    ("sync", False, 0.0),
+    ("sync", True, 0.0),
+    ("sync", True, 0.1),  # EF top-k: the residual bank must ride the checkpoint
+    ("gossip", False, 0.0),   # gossip rejects privacy pipelines by design
+    ("async_hier", False, 0.0),
+    ("async_hier", True, 0.0),
 ]
 
 
-@pytest.mark.parametrize("mode,dp", CASES,
-                         ids=[f"{m}-{'dp_secagg' if d else 'plain'}" for m, d in CASES])
-def test_kill_resume_bitwise_history(tmp_path, make_task, mode, dp):
+@pytest.mark.parametrize(
+    "mode,dp,topk", CASES,
+    ids=[f"{m}-{'dp_topk' if t else 'dp_secagg' if d else 'plain'}"
+         for m, d, t in CASES])
+def test_kill_resume_bitwise_history(tmp_path, make_task, mode, dp, topk):
     ckpt_dir = str(tmp_path / "ckpt")
 
     # 1) the reference: an uninterrupted run of ROUNDS rounds
-    full = api.Federation(_cfg(mode, dp), make_task()).run()
+    full = api.Federation(_cfg(mode, dp, topk=topk), make_task()).run()
 
     # 2) the victim: checkpointing run, killed while emitting round KILL_AT
     seen = ListSink()
-    fed = api.Federation(_cfg(mode, dp, ckpt_dir=ckpt_dir), make_task(),
+    fed = api.Federation(_cfg(mode, dp, ckpt_dir=ckpt_dir, topk=topk), make_task(),
                          telemetry=[seen, CrashingSink(KILL_AT)])
     with pytest.raises(Boom):
         fed.run()
@@ -141,9 +145,13 @@ def test_kill_resume_bitwise_history(tmp_path, make_task, mode, dp):
     rc = meta["round"]
     assert rc == KILL_AT - 1
     assert meta["strategy"] == mode
+    if topk:
+        # the EF residual bank is part of the persisted run state
+        assert "ef_residuals" in state["state"]["runtime"]
 
     # 3) resume into a fresh Federation; remaining rounds must replay bitwise
-    resumed = api.Federation(_cfg(mode, dp), make_task()).run(resume_from=ckpt_dir)
+    resumed = api.Federation(_cfg(mode, dp, topk=topk), make_task()).run(
+        resume_from=ckpt_dir)
     assert len(resumed["round"]) == ROUNDS - (rc + 1)
     _assert_bitwise_tail(full, resumed, rc)
     if dp:

@@ -124,3 +124,30 @@ def save_results(results: list[dict], path: str) -> None:
 def csv_line(name: str, us_per_call: float, derived: str) -> str:
     """Scaffold contract: ``name,us_per_call,derived`` CSV."""
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def check_regression(current: list[dict], baseline: list[dict], *,
+                     metric: str = "gb_per_s", max_drop: float = 0.30) -> list[str]:
+    """Shared perf gate over bench record lists keyed ``(op, shape, backend)``.
+
+    Any key whose ``metric`` dropped more than ``max_drop`` vs the committed
+    baseline — or that disappeared from the bench — fails.  New ops absent
+    from the baseline pass (the refreshed JSON picks them up).  Used by both
+    ``kernel_bench`` (metric=gb_per_s, BENCH_kernels.json) and
+    ``engine_bench`` (metric=events_per_s, BENCH_engine.json).
+    """
+    cur = {(r["op"], tuple(r["shape"]), r["backend"]): r[metric] for r in current}
+    failures = []
+    for b in baseline:
+        key = (b["op"], tuple(b["shape"]), b["backend"])
+        got = cur.get(key)
+        if got is None:
+            failures.append(f"{key}: present in baseline but not benched")
+            continue
+        floor = b[metric] * (1.0 - max_drop)
+        if got < floor:
+            failures.append(
+                f"{key}: {metric} {got:.3f} < floor {floor:.3f} "
+                f"(baseline {b[metric]:.3f}, max drop {max_drop:.0%})"
+            )
+    return failures

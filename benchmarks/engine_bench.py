@@ -1,0 +1,128 @@
+"""Engine scale benchmarks: trace replay at 10⁴–10⁶ clients on one CPU.
+
+The continuous-time engine's claim is *scale*: the lazy row banks and the
+event queue keep a replay's cost proportional to the events in the trace
+and the clients that actually arrive — not the nominal population.  Each
+bench generates a synthetic trace (Poisson arrivals, diurnal carbon,
+heavy-tailed latencies), replays it under all three disciplines
+(sync / async_hier / gossip), and records
+
+  * throughput: replay events per wall-second (the perf-gate metric —
+    CI fails if it drops >30% vs the committed ``BENCH_engine.json``);
+  * time compression: simulated hours per wall-second (how much federation
+    time one CPU second buys);
+  * the consensus-vs-wall-clock trade: final model error and consensus
+    distance against the CO₂ the simulated fleet emitted;
+  * memory: peak row-bank bytes vs what a dense (n, dim) bank would cost.
+
+``--preset ci`` is the 10⁴-client smoke CI runs; ``--preset full`` sweeps
+to 10⁵/10⁶ clients (minutes of wall-clock, run locally).  Record schema
+matches ``kernel_bench``'s ``(op, shape, backend)`` keying so the shared
+``benchmarks.common.check_regression`` gate covers both files.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import check_regression as common_check_regression
+from benchmarks.common import csv_line
+from repro.engine import DISCIPLINES, ReplayConfig, ReplayEngine, synthetic_trace
+
+RECORDS: list[dict] = []
+
+PRESETS = {
+    # CI budget (~tens of seconds): one scale, all three disciplines
+    "ci": [dict(n=10_000, sim_hours=2.0, dim=32, rate=1.0)],
+    # the paper-regime sweep: 10⁴ -> 10⁶ clients; event counts are held
+    # sane by shrinking the horizon/rate as the population grows
+    "full": [
+        dict(n=10_000, sim_hours=4.0, dim=32, rate=1.0),
+        dict(n=100_000, sim_hours=2.0, dim=32, rate=0.5),
+        dict(n=1_000_000, sim_hours=0.5, dim=16, rate=0.2),
+    ],
+}
+
+
+def bench_replay(trace, strategy: str, n: int, dim: int) -> list[str]:
+    eng = ReplayEngine(trace, ReplayConfig(strategy=strategy, dim=dim, seed=0))
+    t0 = time.time()
+    rep = eng.run()
+    wall = time.time() - t0
+    ev_per_s = rep["events"] / wall if wall > 0 else 0.0
+    sim_per_wall = rep["sim_hours"] * 3600.0 / wall if wall > 0 else 0.0
+    dense_mb = n * dim * 4 / 1e6
+    RECORDS.append({
+        "op": f"engine_replay/{strategy}",
+        "shape": [n, dim],
+        "backend": "cpu:numpy",   # the replay engine is pure numpy
+        "ms": wall * 1e3,
+        "events_per_s": ev_per_s,
+        "sim_s_per_wall_s": sim_per_wall,
+        "events": rep["events"],
+        "updates": rep["updates"],
+        "final_error": rep["final_error"],
+        "consensus": rep["consensus"],
+        "co2_kg": rep["co2_kg"],
+        "active_clients": rep["active_clients"],
+        "peak_bank_mb": rep["peak_bank_bytes"] / 1e6,
+        "dense_bank_mb": dense_mb,
+    })
+    return [csv_line(
+        f"engine_replay_{strategy}_n{n}", wall * 1e6,
+        f"events_per_s={ev_per_s:.0f};sim_x={sim_per_wall:.0f};"
+        f"err={rep['final_error']:.3f};consensus={rep['consensus']:.3f};"
+        f"co2_kg={rep['co2_kg']:.3f};"
+        f"bank_mb={rep['peak_bank_bytes'] / 1e6:.1f}/{dense_mb:.1f}",
+    )]
+
+
+def main(preset: str = "ci", out_json: str | None = "BENCH_engine.json"):
+    RECORDS.clear()
+    rows = []
+    for case in PRESETS[preset]:
+        trace = synthetic_trace(
+            case["n"], case["sim_hours"],
+            rate_per_client_per_h=case["rate"], seed=0,
+        )
+        rows.append(csv_line(
+            f"engine_trace_n{case['n']}", 0.0,
+            f"events={trace.n_events};horizon_h={trace.horizon_s / 3600:.1f}",
+        ))
+        for strategy in DISCIPLINES:
+            rows += bench_replay(trace, strategy, case["n"], case["dim"])
+    for r in rows:
+        print(r)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(RECORDS, f, indent=1)
+        print(f"wrote {len(RECORDS)} records -> {out_json}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="ci", choices=sorted(PRESETS))
+    ap.add_argument("--json", default="BENCH_engine.json",
+                    help="machine-readable output path ('' disables)")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="regression mode: fail (exit 1) if any discipline's "
+                         "events/sec drops >30%% vs this committed baseline")
+    args = ap.parse_args()
+    baseline = None
+    if args.check:
+        # read BEFORE main(), which may rewrite the same path via --json
+        with open(args.check) as f:
+            baseline = json.load(f)
+    main(preset=args.preset, out_json=args.json or None)
+    if baseline is not None:
+        failures = common_check_regression(
+            RECORDS, baseline, metric="events_per_s"
+        )
+        if failures:
+            print(f"PERF REGRESSION vs {args.check}:")
+            for f in failures:
+                print(f"  {f}")
+            raise SystemExit(1)
+        print(f"perf check vs {args.check}: OK ({len(RECORDS)} records)")

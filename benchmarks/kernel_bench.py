@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import check_regression as common_check_regression
 from benchmarks.common import csv_line
 from repro.fl.paramspace import ParamSpace
 from repro.kernels import compress as compress_mod
@@ -245,22 +246,12 @@ def check_regression(baseline: list[dict], max_drop: float = 0.30) -> list[str]:
     """Compare RECORDS against a committed baseline (the parsed JSON list):
     any (op, shape, backend) whose GB/s dropped more than ``max_drop`` — or
     disappeared from the bench — fails.  New ops absent from the baseline
-    pass (the refreshed JSON picks them up)."""
-    current = {(r["op"], tuple(r["shape"]), r["backend"]): r["gb_per_s"] for r in RECORDS}
-    failures = []
-    for b in baseline:
-        key = (b["op"], tuple(b["shape"]), b["backend"])
-        got = current.get(key)
-        if got is None:
-            failures.append(f"{key}: present in baseline but not benched")
-            continue
-        floor = b["gb_per_s"] * (1.0 - max_drop)
-        if got < floor:
-            failures.append(
-                f"{key}: {got:.3f} GB/s < floor {floor:.3f} "
-                f"(baseline {b['gb_per_s']:.3f}, max drop {max_drop:.0%})"
-            )
-    return failures
+    pass (the refreshed JSON picks them up).  Delegates to the shared gate
+    in ``benchmarks.common`` (``engine_bench`` runs the same one over
+    events/sec)."""
+    return common_check_regression(
+        RECORDS, baseline, metric="gb_per_s", max_drop=max_drop
+    )
 
 
 def main(out_json: str | None = "BENCH_kernels.json"):

@@ -35,9 +35,9 @@ registered; the built-in ``gossip`` strategy is itself registered this way.
 The legacy ``FLConfig``/``Simulation`` entry points survive as deprecation
 shims over this package (see the README migration table).
 """
-from repro.api.config import (CarbonConfig, CheckpointConfig, ExperimentConfig,
-                              OrchestratorConfig, PrivacyConfig, TopologyConfig,
-                              TrainingConfig)
+from repro.api.config import (CarbonConfig, CheckpointConfig, EngineConfig,
+                              ExperimentConfig, OrchestratorConfig,
+                              PrivacyConfig, TopologyConfig, TrainingConfig)
 from repro.api.federation import (STRATEGIES, Federation, Strategy, build,
                                   register_strategy, strategy_names)
 from repro.api.pipeline import (AggregationContext, ClipStage,
@@ -60,7 +60,8 @@ from repro.api.sync import SyncStrategy  # noqa: E402  isort: skip
 __all__ = [
     "AggregationContext", "AsyncHierStrategy", "build", "build_pipeline",
     "CallbackSink", "CarbonConfig", "CheckpointConfig", "ClipStage",
-    "cohort_wire_bytes", "ConsoleSink", "ExperimentConfig", "Federation",
+    "cohort_wire_bytes", "ConsoleSink", "EngineConfig", "ExperimentConfig",
+    "Federation",
     "FederatedTask", "FlushEvent", "fuse_pipeline", "FusedCompressStage",
     "GossipStrategy", "HistoryRecorder", "MaskStage", "MixEvent",
     "NoiseStage", "OrchestratorConfig", "PrivacyConfig", "PrivacyPipeline",

@@ -20,8 +20,12 @@ Behavior (unchanged from the engine it replaces):
     global-tier staleness.
   * **Staleness-aware selection** — every flush feeds observed staleness
     into the orchestrator's straggler EMA (``orchestrator.observe_staleness``).
-  * **Event-driven clock** — completion times from the fleet latency model,
-    scaled by ``latency_spread``.
+  * **Event-driven clock** — a ``repro.engine`` ``SimClock`` advanced to
+    each completion event popped from an ``EventQueue`` (the engine core
+    this strategy's hand-rolled heap was factored into).  Completion times
+    come from the fleet latency model scaled by ``latency_spread`` — or,
+    when ``ExperimentConfig.engine.trace`` is set, from the clients'
+    recorded latency streams (``EngineRuntime.completion_latencies``).
 
 **Sync-equivalence anchor**: ``latency_spread=0``, ``buffer_k =
 clients_per_round = concurrency``, one region, ``edge_sync_every=1`` makes
@@ -40,7 +44,6 @@ per-region values land in the ``eps_by_region`` summary.
 """
 from __future__ import annotations
 
-import heapq
 from typing import Callable
 
 import jax
@@ -53,6 +56,8 @@ from repro.api.runtime import RuntimeContext
 from repro.api.telemetry import ASYNC_HISTORY_KEYS, FlushEvent
 from repro.core import carbon as carbon_mod
 from repro.core import orchestrator as orch
+from repro.engine.clock import SimClock
+from repro.engine.events import EventQueue
 from repro.fl import hierarchy
 from repro.privacy import dp as dp_mod
 from repro.privacy.accountant import SubsampledAccountant
@@ -133,11 +138,18 @@ class AsyncHierStrategy:
             ))
             if per_region:
                 self.accountants[ridx] = SubsampledAccountant(dp.delta)
-        # event-clock state; populated on the first run() call (or restored
-        # by load_state_dict, which flips _started so run() continues mid-heap)
+        # event-clock state (repro.engine core); reset on the first run()
+        # call, or restored by load_state_dict, which flips _started so
+        # run() continues mid-queue
+        self.clock = SimClock()
+        self.events = EventQueue()   # payload: (region idx, BufferEntry)
         self._started = False
-        self._seq = 0        # heap tiebreaker: plain int (serializable)
         self._active = None  # (ridx, trigger entry) while draining a region
+
+    @property
+    def now(self) -> float:
+        """Simulated seconds — the event clock's current position."""
+        return self.clock.now_s
 
     # ------------------------------------------------------------------
     def state_dict(self, ctx: RuntimeContext) -> dict:
@@ -165,8 +177,7 @@ class AsyncHierStrategy:
             })
         return {
             "flushes": self.flushes,
-            "now": self.now,
-            "seq": self._seq,
+            "clock": self.clock.state_dict(),
             "global_version": self.global_version,
             "co2_l": list(self.co2_l),
             "dur_l": list(self.dur_l),
@@ -174,10 +185,9 @@ class AsyncHierStrategy:
             "cum_co2": self.cum_co2,
             "acc": self.acc,
             "last_acc": self.last_acc,
-            "heap": [
-                {"t": t, "seq": sq, "ridx": ridx, "entry": _pack_entry(e)}
-                for (t, sq, ridx, e) in self.heap
-            ],
+            "events": self.events.state_dict(
+                pack=lambda p: {"ridx": p[0], "entry": _pack_entry(p[1])}
+            ),
             "active": (
                 None if self._active is None
                 else {"ridx": self._active[0], "entry": _pack_entry(self._active[1])}
@@ -196,8 +206,7 @@ class AsyncHierStrategy:
                 f"this run has {len(self.regions)}"
             )
         self.flushes = int(s["flushes"])
-        self.now = float(s["now"])
-        self._seq = int(s["seq"])
+        self.clock.load_state_dict(s["clock"])
         self.global_version = int(s["global_version"])
         self.co2_l = [float(v) for v in s["co2_l"]]
         self.dur_l = [float(v) for v in s["dur_l"]]
@@ -207,10 +216,10 @@ class AsyncHierStrategy:
         self.last_acc = float(s["last_acc"])
         # restored in saved order: a valid heap restored verbatim pops in
         # the same sequence, which is what keeps the event replay bitwise
-        self.heap = [
-            (float(d["t"]), int(d["seq"]), int(d["ridx"]), _unpack_entry(d["entry"]))
-            for d in s["heap"]
-        ]
+        self.events.load_state_dict(
+            s["events"],
+            unpack=lambda d: (int(d["ridx"]), _unpack_entry(d["entry"])),
+        )
         self._active = (
             None if s["active"] is None
             else (int(s["active"]["ridx"]), _unpack_entry(s["active"]["entry"]))
@@ -235,10 +244,11 @@ class AsyncHierStrategy:
         self._started = True
 
     # ------------------------------------------------------------------
-    def _dispatch(self, ctx: RuntimeContext, reg: hierarchy.Region, now: float, heap: list) -> None:
+    def _dispatch(self, ctx: RuntimeContext, reg: hierarchy.Region) -> None:
         """Select a wave in ``reg``, train it against the current edge model,
         and enqueue per-client completion events."""
         train = ctx.train
+        now = self.clock.now_s
         k = min(train.clients_per_round, reg.n)
         reg.key, k_sel, k_int, k_agg, k_noise = jax.random.split(reg.key, 5)
         t_hours = reg.waves * ctx.carbon.round_hours
@@ -252,12 +262,20 @@ class AsyncHierStrategy:
                              cohort=len(sel_global)):
             res = ctx.train_cohort(reg.edge_params, sel_global, reg.waves)
 
-        durs = self.client_durs[np.asarray(sel_global)]
-        mean_d = float(np.mean(durs))
-        # latency_spread interpolates between "wave lands together" (0, the
-        # sync-equivalence anchor) and the full heterogeneous fleet model (1)
-        spread = ctx.topology.latency_spread
-        comp = now + carbon_mod.ROUND_OVERHEAD_S + mean_d + spread * (durs - mean_d)
+        if ctx.engine is not None:
+            # trace-driven latencies: each client's recorded arrival stream
+            # (cycled), blended with the analytic model by latency_jitter —
+            # this replaces the latency_spread interpolation entirely
+            lat = ctx.engine.completion_latencies(sel_global)
+            comp = now + carbon_mod.ROUND_OVERHEAD_S + lat
+        else:
+            durs = self.client_durs[np.asarray(sel_global)]
+            mean_d = float(np.mean(durs))
+            # latency_spread interpolates between "wave lands together" (0,
+            # the sync-equivalence anchor) and the full heterogeneous fleet
+            # model (1)
+            spread = ctx.topology.latency_spread
+            comp = now + carbon_mod.ROUND_OVERHEAD_S + mean_d + spread * (durs - mean_d)
         for j, (ci, li) in enumerate(zip(sel_global, sel_local)):
             entry = hierarchy.BufferEntry(
                 client=int(ci), local=int(li), version=reg.version, wave=reg.waves,
@@ -266,15 +284,14 @@ class AsyncHierStrategy:
                 loss=float(res.loss_last[j]), t_hours=t_hours, k_agg=k_agg,
                 inten=inten,
             )
-            heapq.heappush(heap, (float(comp[j]), self._seq, reg.idx, entry))
-            self._seq += 1
+            self.events.push(float(comp[j]), (reg.idx, entry))
         reg.waves += 1
         reg.inflight += len(sel_global)
 
-    def _maybe_dispatch(self, ctx: RuntimeContext, reg: hierarchy.Region, now: float, heap: list) -> None:
+    def _maybe_dispatch(self, ctx: RuntimeContext, reg: hierarchy.Region) -> None:
         k = min(ctx.train.clients_per_round, reg.n)
         while reg.inflight + k <= max(self.concurrency, k):
-            self._dispatch(ctx, reg, now, heap)
+            self._dispatch(ctx, reg)
 
     # ------------------------------------------------------------------
     def _edge_sync(self, ctx: RuntimeContext, reg: hierarchy.Region) -> None:
@@ -406,7 +423,7 @@ class AsyncHierStrategy:
         while len(reg.buffer) >= self.buffer_k and self.flushes < train.rounds:
             with ctx.tracer.span("flush", region=reg.idx, flush=self.flushes) as fsp:
                 entries, taus, co2, dur, flush_mask, wire = self._flush(ctx, reg, entry)
-                fsp.set(co2_g=co2, bytes=wire)
+                fsp.set(co2_g=co2, bytes=wire, sim_time_s=self.clock.now_s)
             # straggler EMA: observed staleness per flushed client feeds
             # the MARL state so selection can demote chronic stragglers
             # (zero in the sync-equivalence regime -> no behavior change).
@@ -444,7 +461,7 @@ class AsyncHierStrategy:
             ))
             ctx.checkpoint_round(self, self.flushes - 1)
         if self.flushes < train.rounds:
-            self._maybe_dispatch(ctx, reg, self.now, self.heap)
+            self._maybe_dispatch(ctx, reg)
         self._active = None
 
     def run(self, ctx: RuntimeContext, emit: Callable) -> dict:
@@ -456,13 +473,12 @@ class AsyncHierStrategy:
             self.cum_co2 = 0.0
             self.acc = ctx.evaluate(ctx.server_state.params)
             self.last_acc = self.acc
-            self.heap: list = []
-            self._seq = 0
-            self.now = 0.0
+            self.clock = SimClock()
+            self.events = EventQueue()
             self.flushes = 0
             self._active = None
             for reg in self.regions:
-                self._maybe_dispatch(ctx, reg, self.now, self.heap)
+                self._maybe_dispatch(ctx, reg)
             self._started = True
         elif self._active is not None:
             # resumed from a checkpoint taken between two flushes of one
@@ -470,8 +486,11 @@ class AsyncHierStrategy:
             ridx, entry = self._active
             self._drain(ctx, self.regions[ridx], entry, emit)
 
-        while self.flushes < train.rounds and self.heap:
-            self.now, _, ridx, entry = heapq.heappop(self.heap)
+        while self.flushes < train.rounds and self.events:
+            if ctx.engine is not None and ctx.engine.past_horizon(self.events.peek_time()):
+                break  # next completion lands past the sim_hours horizon
+            t, _, (ridx, entry) = self.events.pop()
+            self.clock.advance_to(t)
             reg = self.regions[ridx]
             reg.inflight -= 1
             reg.buffer.append(entry)
@@ -484,7 +503,7 @@ class AsyncHierStrategy:
         # — the energy was spent whether or not a flush consumed the delta
         unflushed = 0.0
         leftovers: dict[int, list] = {reg.idx: list(reg.buffer) for reg in self.regions}
-        for _, _, ridx, entry in self.heap:
+        for _, _, (ridx, entry) in self.events:
             leftovers[ridx].append(entry)
         for reg in self.regions:
             g, _ = self._emissions_for(ctx, leftovers[reg.idx])

@@ -11,6 +11,7 @@ Here each subsystem owns its own config block:
     CarbonConfig        fleet heterogeneity + carbon-phase clock (§III-D)
     OrchestratorConfig  selection policy + MARL state encoding (§III-B)
     CheckpointConfig    fault tolerance: state snapshots + resume cadence
+    EngineConfig        continuous-time engine: trace-driven simulated clock
 
 ``ExperimentConfig`` composes the blocks and round-trips through plain
 dicts (``to_dict``/``from_dict``) so experiment grids can live in JSON.  The
@@ -138,6 +139,37 @@ class CheckpointConfig:
 
 
 @dataclasses.dataclass
+class EngineConfig:
+    """Continuous-time engine (``repro.engine``): trace-driven simulated
+    time for every strategy.
+
+    ``trace`` names a ``metafed-trace/v1`` file (.jsonl/.npz); setting it
+    attaches an :class:`~repro.engine.runtime.EngineRuntime` to the run —
+    sync rounds become barrier events on a simulated clock, async
+    completion times come from the clients' recorded latency streams, and
+    gossip can run time-budgeted mixing waves.  ``trace=None`` (default)
+    keeps the analytic §III-D clock and changes nothing.
+    """
+
+    trace: Optional[str] = None   # metafed-trace/v1 path (None = analytic clock)
+    # 0 = analytic latencies (the bitwise legacy-equivalence anchor),
+    # 1 = fully recorded; in between interpolates per dispatch
+    latency_jitter: float = 1.0
+    sim_hours: float = 0.0        # stop once the sim clock passes this (0 = never)
+    wave_budget_s: float = 0.0    # gossip: >0 sizes mixing waves by time budget
+
+    def __post_init__(self):
+        if not 0.0 <= self.latency_jitter <= 1.0:
+            raise ValueError(
+                f"latency_jitter must be in [0, 1], got {self.latency_jitter}"
+            )
+        if self.sim_hours < 0:
+            raise ValueError(f"sim_hours must be >= 0, got {self.sim_hours}")
+        if self.wave_budget_s < 0:
+            raise ValueError(f"wave_budget_s must be >= 0, got {self.wave_budget_s}")
+
+
+@dataclasses.dataclass
 class ExperimentConfig:
     """One experiment = the composition of the subsystem blocks."""
 
@@ -147,6 +179,7 @@ class ExperimentConfig:
     carbon: CarbonConfig = dataclasses.field(default_factory=CarbonConfig)
     orchestrator: OrchestratorConfig = dataclasses.field(default_factory=OrchestratorConfig)
     checkpoint: CheckpointConfig = dataclasses.field(default_factory=CheckpointConfig)
+    engine: EngineConfig = dataclasses.field(default_factory=EngineConfig)
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict[str, Any]:
@@ -158,6 +191,7 @@ class ExperimentConfig:
             "carbon": dataclasses.asdict(self.carbon),
             "orchestrator": dataclasses.asdict(self.orchestrator),
             "checkpoint": dataclasses.asdict(self.checkpoint),
+            "engine": dataclasses.asdict(self.engine),
         }
         dp = self.privacy.dp
         d["privacy"]["dp"] = dict(dp._asdict()) if dp is not None else None
@@ -176,4 +210,5 @@ class ExperimentConfig:
             carbon=CarbonConfig(**d.get("carbon", {})),
             orchestrator=OrchestratorConfig(**d.get("orchestrator", {})),
             checkpoint=CheckpointConfig(**d.get("checkpoint", {})),
+            engine=EngineConfig(**d.get("engine", {})),
         )

@@ -172,6 +172,8 @@ class GossipStrategy:
             self.last_acc = self.acc
         tracer = ctx.tracer
         for rnd in range(self.start_round, train.rounds):
+            if ctx.engine is not None and ctx.engine.past_horizon():
+                break  # engine.sim_hours horizon reached on the simulated clock
             with tracer.span("round", round=rnd, strategy=self.name) as round_sp:
                 # same 5-way split as the sync strategy: k_agg/k_noise are unused
                 # (no server aggregation) but keeping the schedule makes the
@@ -201,10 +203,16 @@ class GossipStrategy:
                     W = gossip_mod.carbon_reweight(
                         W, np.asarray(inten)[sel], topo.carbon_beta
                     )
-                mix_bytes = float(topo.mixing_steps * plan.bytes_per_step(ctx.pspace.nbytes))
-                with tracer.span("mix", round=rnd, steps=topo.mixing_steps,
+                # time-budgeted waves: engine.wave_budget_s > 0 sizes the
+                # round's mixing passes by what the budget pays for at the
+                # cohort's transfer rate, instead of the fixed mixing_steps
+                steps = topo.mixing_steps
+                if ctx.engine is not None and ctx.engine.cfg.wave_budget_s > 0.0:
+                    steps = ctx.engine.wave_steps(ctx.fleet, sel, ctx.model_bytes)
+                mix_bytes = float(steps * plan.bytes_per_step(ctx.pspace.nbytes))
+                with tracer.span("mix", round=rnd, steps=steps,
                                  graph=topo.graph, bytes=mix_bytes):
-                    for _ in range(topo.mixing_steps):
+                    for _ in range(steps):
                         rows = gossip_mod.mix_rows(ctx.pspace, rows, W)
                     self.node_rows = self.node_rows.at[sel_ix].set(rows)
                 self.mix_bytes_total += mix_bytes
@@ -213,6 +221,15 @@ class GossipStrategy:
                 # ---- carbon + time accounting (training cost = sync's) --------
                 sel_mask, co2, dur = ctx.round_accounting(sel, t_hours)
                 self.cum_co2 += co2
+                if ctx.engine is not None:
+                    sim_dur = ctx.engine.gossip_wave(
+                        ctx.fleet, sel, ctx.model_bytes, steps, dur
+                    )
+                    round_sp.set(
+                        sim_s=sim_dur, sim_time_s=ctx.engine.clock.now_s
+                    )
+                    if ctx.engine.cfg.wave_budget_s > 0.0:
+                        dur = sim_dur
 
                 # ---- evaluation (average model) + MARL update ------------------
                 if (rnd + 1) % train.eval_every == 0 or rnd == train.rounds - 1:
@@ -229,7 +246,7 @@ class GossipStrategy:
                     co2_g=co2, cum_co2_g=self.cum_co2, duration_s=dur, reward=r,
                     eps_spent=0.0, selected=tuple(int(c) for c in sel),
                     consensus=self.consensus, spectral_gap=gap,
-                    mix_steps=topo.mixing_steps, mix_bytes=mix_bytes,
+                    mix_steps=steps, mix_bytes=mix_bytes,
                 ))
             self.start_round = rnd + 1
             ctx.checkpoint_round(self, rnd)

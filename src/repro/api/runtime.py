@@ -147,6 +147,20 @@ class RuntimeContext:
         # fault tolerance: Federation.run(checkpoint=...) installs a
         # CheckpointManager here; strategies call checkpoint_round per round
         self.ckpt_manager = None
+        # continuous-time engine: EngineConfig.trace attaches the simulated
+        # clock + recorded latency streams every strategy consults
+        self.engine = None
+        if cfg.engine.trace:
+            from repro.engine import runtime as engine_runtime
+            from repro.engine import traces as traces_mod
+
+            trace = traces_mod.load(cfg.engine.trace)
+            base_durs = np.asarray(carbon_mod.client_durations_s(
+                self.fleet, self.round_flops, self.model_bytes
+            ), np.float64)
+            self.engine = engine_runtime.EngineRuntime(
+                trace, cfg.engine, train.n_clients, base_durs
+            )
 
     def _fallback_flops(self) -> float:
         return 6.0 * self.pspace.dim * self.train.batch_size * self.train.local_steps
@@ -173,6 +187,8 @@ class RuntimeContext:
             s["c_locals"] = pack_tree(self.c_locals)
         if self.ef_residuals is not None:  # EF top-k residual bank
             s["ef_residuals"] = pack_tree(self.ef_residuals)
+        if self.engine is not None:  # simulated clock + latency-stream cursors
+            s["engine"] = self.engine.state_dict()
         return s
 
     def load_state_dict(self, s: dict) -> None:
@@ -194,6 +210,13 @@ class RuntimeContext:
                     "— was it written without topk_density set?"
                 )
             self.ef_residuals = unpack_tree(s["ef_residuals"], self.ef_residuals)
+        if self.engine is not None:
+            if "engine" not in s:
+                raise ValueError(
+                    "checkpoint has no engine state but this run is trace-driven "
+                    "— was it written without engine.trace set?"
+                )
+            self.engine.load_state_dict(s["engine"])
 
     # ------------------------------------------------------------------
     def _cohort_inputs(self, sel, step: int, corrections=None):

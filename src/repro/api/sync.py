@@ -118,6 +118,8 @@ class SyncStrategy:
             self.last_acc = self.acc
         tracer = ctx.tracer
         for rnd in range(self.start_round, train.rounds):
+            if ctx.engine is not None and ctx.engine.past_horizon():
+                break  # engine.sim_hours horizon reached on the simulated clock
             with tracer.span("round", round=rnd, strategy=self.name) as round_sp:
                 self.key, k_sel, k_int, k_agg, k_noise = jax.random.split(self.key, 5)
                 t_hours = rnd * cfg.carbon.round_hours
@@ -181,6 +183,16 @@ class SyncStrategy:
                 # ---- carbon + time accounting -------------------------------
                 sel_mask, co2, dur = ctx.round_accounting(sel, t_hours)
                 self.cum_co2 += co2
+                if ctx.engine is not None:
+                    # barrier event on the simulated clock; with jitter=0 the
+                    # engine echoes the analytic duration back bitwise (the
+                    # legacy-equivalence anchor), so dur is unchanged there
+                    sim_dur = ctx.engine.round_barrier(sel, dur)
+                    round_sp.set(
+                        sim_s=sim_dur, sim_time_s=ctx.engine.clock.now_s
+                    )
+                    if ctx.engine.cfg.latency_jitter > 0.0:
+                        dur = sim_dur
 
                 # ---- evaluation + MARL update --------------------------------
                 if (rnd + 1) % train.eval_every == 0 or rnd == train.rounds - 1:

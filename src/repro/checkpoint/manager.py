@@ -47,6 +47,9 @@ def resume_key(cfg) -> str:
     d = json.loads(json.dumps(d, default=str))  # deep, JSON-safe copy
     d.get("training", {}).pop("rounds", None)
     d.pop("checkpoint", None)
+    # the trace *path* may move between hosts; content identity is enforced
+    # separately by the trace hash stored in the engine's own state
+    d.get("engine", {}).pop("trace", None)
     blob = json.dumps(d, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()[:16]
 

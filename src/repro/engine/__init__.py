@@ -1,0 +1,34 @@
+"""``repro.engine`` — trace-driven continuous-time federation engine.
+
+The subsystem that moves the repo from "a few hundred clients in lock-step
+rounds" to the paper's Metaverse regime: a continuous population of
+devices arriving, training, and dropping out under time-varying latency
+and carbon intensity, simulated to 10⁵–10⁶ clients on one CPU.
+
+Pieces (each checkpointable via ``state_dict`` like the rest of the runtime):
+
+    clock       ``SimClock`` — monotone simulated seconds, one per run
+    events      ``EventQueue`` — the (t, seq) min-heap with FIFO ties,
+                factored out of the async strategy's hand-rolled heap
+    traces      schema-versioned JSONL/npz timelines (arrivals, latencies,
+                per-region carbon) + synthetic generators + exact replay
+    population  ``ClientBank`` — lazy (n, dim) row banks; memory follows
+                the *active* population, not the nominal one
+    replay      ``ReplayEngine`` — sync / async_hier / gossip disciplines
+                at population scale over a trace
+    runtime     ``EngineRuntime`` — the bridge the api-layer strategies
+                consult when ``ExperimentConfig.engine.trace`` is set
+"""
+from repro.engine.clock import SimClock
+from repro.engine.events import EventQueue
+from repro.engine.population import ClientBank
+from repro.engine.replay import DISCIPLINES, REPORT_SCHEMA, ReplayConfig, ReplayEngine
+from repro.engine.runtime import EngineRuntime
+from repro.engine.traces import (TRACE_SCHEMA, Trace, TraceCursor, load,
+                                 synthetic_trace, trace_hash)
+
+__all__ = [
+    "SimClock", "EventQueue", "ClientBank", "ReplayConfig", "ReplayEngine",
+    "EngineRuntime", "Trace", "TraceCursor", "load", "synthetic_trace",
+    "trace_hash", "TRACE_SCHEMA", "REPORT_SCHEMA", "DISCIPLINES",
+]

@@ -1,0 +1,87 @@
+"""Discrete-event queue: the continuous-time engine's scheduling core.
+
+This is the event heap that used to live hand-rolled inside
+``repro.api.async_hier`` — entries ordered by ``(time, seq)`` with a plain
+int ``seq`` as the tie-breaker — factored out so the trace-replay engine,
+the async strategy, and anything else that schedules future completions
+share one implementation (and one checkpoint format).
+
+Ordering contract:
+
+  * pops are globally time-ordered (earliest ``t`` first);
+  * among equal times, **insertion order wins** (``seq`` is monotone), so
+    ties are deterministic and FIFO — the property the bitwise kill→resume
+    tests depend on;
+  * payloads are never compared (``seq`` is unique), so anything —
+    dataclasses, tuples, device arrays — can ride the heap.
+
+Checkpointing: ``state_dict(pack)`` serializes the heap *in its internal
+list order* and ``load_state_dict(s, unpack)`` restores it verbatim.  A
+valid heap restored element-for-element pops in the identical sequence,
+which is what keeps resumed event replay bitwise.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Any, Callable, Optional
+
+
+def _identity(x: Any) -> Any:
+    return x
+
+
+class EventQueue:
+    """Min-heap of ``(t_s, seq, payload)`` with FIFO tie-breaking."""
+
+    def __init__(self):
+        self._heap: list[tuple[float, int, Any]] = []
+        self._seq = 0  # plain int: unique, monotone, serializable
+
+    # ------------------------------------------------------------------
+    def push(self, t_s: float, payload: Any) -> int:
+        """Schedule ``payload`` at absolute simulated time ``t_s``;
+        returns the entry's sequence number."""
+        seq = self._seq
+        heapq.heappush(self._heap, (float(t_s), seq, payload))
+        self._seq += 1
+        return seq
+
+    def pop(self) -> tuple[float, int, Any]:
+        """Remove and return the earliest ``(t_s, seq, payload)``."""
+        return heapq.heappop(self._heap)
+
+    def peek_time(self) -> Optional[float]:
+        """Earliest scheduled time, or None when empty."""
+        return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+    def __iter__(self):
+        """Iterate entries in internal heap order (NOT pop order) — for
+        accounting sweeps over still-scheduled events."""
+        return iter(self._heap)
+
+    # ------------------------------------------------------------------
+    def state_dict(self, pack: Callable[[Any], Any] = _identity) -> dict:
+        """Serialize in internal list order; ``pack`` maps each payload to
+        a checkpoint-safe container."""
+        return {
+            "seq": self._seq,
+            "heap": [
+                {"t": t, "seq": sq, "payload": pack(p)}
+                for (t, sq, p) in self._heap
+            ],
+        }
+
+    def load_state_dict(self, s: dict, unpack: Callable[[Any], Any] = _identity) -> None:
+        """Restore verbatim: a valid heap reloaded element-for-element pops
+        in the same order it would have, so event replay stays bitwise."""
+        self._seq = int(s["seq"])
+        self._heap = [
+            (float(d["t"]), int(d["seq"]), unpack(d["payload"]))
+            for d in s["heap"]
+        ]

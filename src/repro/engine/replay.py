@@ -1,0 +1,357 @@
+"""Trace-driven replay at population scale: 10⁵–10⁶ simulated clients.
+
+``ReplayEngine`` runs a federation *protocol* (not the full learning stack)
+against a recorded/synthetic :class:`~repro.engine.traces.Trace`, measuring
+what the paper's Metaverse regime actually stresses: event throughput,
+consensus-vs-simulated-wall-clock, and CO₂ under time-varying carbon — at
+populations the jit'd training runtime cannot touch.  The workload is the
+standard synthetic consensus problem: client ``i`` holds a private target
+``z_i = z* + perturbation`` and every update pulls the model toward it, so
+"learning progress" is the exactly-computable distance ‖model − z*‖.
+
+All three disciplines run off the same :class:`SimClock`, the same
+:class:`TraceCursor`, and the same lazy :class:`ClientBank`:
+
+    sync        barrier rounds over the next ``cohort`` arrivals; the clock
+                jumps to the slowest cohort member's completion
+    async       completions feed per-region FedBuff buffers via the
+                :class:`EventQueue`; flushes at ``buffer_k`` apply
+                1/√(1+τ) staleness-weighted deltas
+    gossip      time-budgeted mixing waves: every ``wave_budget_s`` window's
+                completions locally step then ring-mix, with the number of
+                mixing passes set by what the budget can pay for
+
+Everything is plain numpy (no jit) — the hot path is event scheduling and
+(k, dim) row math, and the engine checkpoints/resumes bitwise like the rest
+of the runtime (clock + cursor + queue + bank + buffers in ``state_dict``).
+
+CO₂: each completion is charged ``latency · DEVICE_POWER_W`` of energy at
+the trace's regional intensity curve sampled at the completion instant —
+the same device model as ``repro.core.carbon``, driven by recorded time
+instead of the analytic sinusoid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import carbon as carbon_mod
+from repro.engine.clock import SimClock
+from repro.engine.events import EventQueue
+from repro.engine.population import ClientBank
+from repro.engine.traces import Trace, TraceCursor
+
+REPORT_SCHEMA = "metafed-engine-report/v1"
+_PERTURB_BANK = 256  # distinct client-target perturbations (id mod bank)
+
+DISCIPLINES = ("sync", "async_hier", "gossip")
+
+
+@dataclasses.dataclass
+class ReplayConfig:
+    """Protocol knobs of a replay run (mirrors the api-layer vocabulary)."""
+
+    strategy: str = "sync"        # sync | async_hier | gossip
+    dim: int = 64                 # model dimension (ParamSpace row width)
+    cohort: int = 64              # sync barrier size (arrivals per round)
+    buffer_k: int = 32            # async flush threshold per region
+    staleness_cap: int = 10       # FedBuff 1/sqrt(1+min(tau, cap))
+    wave_budget_s: float = 300.0  # gossip wave window + mixing-time budget
+    lr: float = 0.5
+    hetero: float = 0.2           # client-target perturbation scale
+    sim_hours: float = 0.0        # horizon cap (0 = the trace's horizon)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.strategy not in DISCIPLINES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; one of {DISCIPLINES}"
+            )
+        if self.dim < 1 or self.cohort < 1 or self.buffer_k < 1:
+            raise ValueError("dim, cohort and buffer_k must be >= 1")
+        if self.wave_budget_s <= 0:
+            raise ValueError("wave_budget_s must be > 0")
+
+
+class ReplayEngine:
+    """One replay = (trace, config) → deterministic protocol trajectory."""
+
+    def __init__(self, trace: Trace, cfg: ReplayConfig):
+        self.trace = trace
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.target = rng.standard_normal(cfg.dim).astype(np.float32)
+        # per-client heterogeneity without per-client storage: a small bank
+        # of perturbation rows indexed by id mod bank
+        self.perturb = (cfg.hetero *
+                        rng.standard_normal((_PERTURB_BANK, cfg.dim))
+                        ).astype(np.float32)
+        self.clock = SimClock()
+        self.cursor = TraceCursor(trace)
+        self.queue = EventQueue()      # async/gossip completion events
+        self.bank = ClientBank(trace.n_clients, cfg.dim)
+        self.g = np.zeros(cfg.dim, np.float32)  # global model (sync/async)
+        self.version = 0               # global model version (async staleness)
+        self.buffers: dict[int, list] = {r: [] for r in range(trace.n_regions)}
+        self.events = 0                # completions processed
+        self.updates = 0               # rounds / flushes / waves applied
+        self.co2_g = 0.0
+        self.error_curve: list[tuple[float, float]] = []  # (sim_s, error)
+        self._host_s = 0.0
+        horizon = trace.horizon_s
+        if cfg.sim_hours > 0:
+            horizon = min(horizon, cfg.sim_hours * 3600.0)
+        self.horizon_s = horizon
+
+    # ------------------------------------------------------------------
+    def _z(self, ids: np.ndarray) -> np.ndarray:
+        """Private client targets for ``ids`` — (k, dim)."""
+        return self.target + self.perturb[np.asarray(ids) % _PERTURB_BANK]
+
+    def _charge_co2(self, idx: np.ndarray) -> float:
+        """CO₂ of the completions at arrival indices ``idx``: latency-hours
+        of device power at the regional intensity when each one finished."""
+        if len(idx) == 0:
+            return 0.0
+        tr = self.trace
+        lat = tr.arrival_latency_s[idx]
+        done_t = tr.arrival_t_s[idx] + lat
+        region = tr.client_region(tr.arrival_client[idx])
+        inten = tr.intensity_at(region, done_t)
+        kwh = lat * carbon_mod.DEVICE_POWER_W / 3.6e6
+        g = float(np.sum(kwh * inten))
+        self.co2_g += g
+        return g
+
+    def _error(self) -> float:
+        if self.cfg.strategy == "gossip":
+            m = self.bank.mean().astype(np.float32)
+            return float(np.linalg.norm(m - self.target))
+        return float(np.linalg.norm(self.g - self.target))
+
+    def _mark(self):
+        self.error_curve.append((self.clock.now_s, self._error()))
+
+    # ------------------------------------------------------------------
+    # sync: barrier rounds over consecutive arrival cohorts
+    # ------------------------------------------------------------------
+    def _run_sync(self, tracer, stop_after) -> None:
+        tr, cfg = self.trace, self.cfg
+        while self.cursor.peek_t() <= self.horizon_s:
+            if stop_after is not None and self.updates >= stop_after:
+                return
+            idx = self.cursor.take(cfg.cohort)
+            ids = tr.arrival_client[idx]
+            done = float(np.max(tr.arrival_t_s[idx] + tr.arrival_latency_s[idx]))
+            # a straggler from the previous barrier may finish later than
+            # this cohort does: the barrier still cannot start early
+            t1 = max(self.clock.now_s, done)
+            with tracer.span("round", round=self.updates, cohort=len(idx)) as sp:
+                co2 = self._charge_co2(idx)
+                delta = cfg.lr * (self._z(ids) - self.g)
+                self.bank.update(ids, self.g + delta)
+                self.g = self.g + delta.mean(axis=0)
+                dt = t1 - self.clock.now_s
+                self.clock.advance_to(t1)
+                self.events += len(idx)
+                self.updates += 1
+                self._mark()
+                sp.set(sim_s=dt, sim_time_s=self.clock.now_s, co2_g=co2)
+
+    # ------------------------------------------------------------------
+    # async: trace-driven completions into per-region FedBuff buffers
+    # ------------------------------------------------------------------
+    def _pump(self) -> None:
+        """Move arrivals (dispatches) into the completion queue while they
+        precede the earliest queued completion — the payload records the
+        model version the client trained against."""
+        tr = self.trace
+        while True:
+            t = self.cursor.peek_t()
+            if t > self.horizon_s:
+                return
+            nxt = self.queue.peek_time()
+            if nxt is not None and t > nxt:
+                return
+            i = int(self.cursor.take(1)[0])
+            self.queue.push(tr.arrival_t_s[i] + tr.arrival_latency_s[i],
+                            (i, self.version))
+
+    def _run_async(self, tracer, stop_after) -> None:
+        tr, cfg = self.trace, self.cfg
+        while True:
+            if stop_after is not None and self.updates >= stop_after:
+                return
+            self._pump()
+            if not self.queue:
+                return
+            t, _, (i, v) = self.queue.pop()
+            self.clock.advance_to(max(t, self.clock.now_s))
+            self.events += 1
+            self._charge_co2(np.asarray([i]))
+            r = int(tr.client_region(int(tr.arrival_client[i])))
+            self.buffers[r].append((i, v))
+            if len(self.buffers[r]) >= cfg.buffer_k:
+                batch = self.buffers[r][: cfg.buffer_k]
+                self.buffers[r] = self.buffers[r][cfg.buffer_k:]
+                idx = np.asarray([b[0] for b in batch])
+                tau = self.version - np.asarray([b[1] for b in batch], np.float64)
+                w = 1.0 / np.sqrt(1.0 + np.minimum(tau, cfg.staleness_cap))
+                ids = tr.arrival_client[idx]
+                delta = cfg.lr * w[:, None].astype(np.float32) * (self._z(ids) - self.g)
+                self.bank.update(ids, self.g + delta)
+                self.g = self.g + delta.mean(axis=0)
+                self.version += 1
+                self.updates += 1
+                self._mark()
+                with tracer.span("flush", region=r, flush=self.updates - 1,
+                                 cohort=len(idx)) as sp:
+                    sp.set(sim_s=float(np.mean(tr.arrival_latency_s[idx])),
+                           sim_time_s=self.clock.now_s,
+                           staleness=float(np.mean(tau)))
+
+    # ------------------------------------------------------------------
+    # gossip: time-budgeted mixing waves over each window's completions
+    # ------------------------------------------------------------------
+    def _run_gossip(self, tracer, stop_after) -> None:
+        tr, cfg = self.trace, self.cfg
+        window = cfg.wave_budget_s
+        while True:
+            if stop_after is not None and self.updates >= stop_after:
+                return
+            self._pump()
+            nxt = self.queue.peek_time()
+            if nxt is None:
+                return
+            # fast-forward whole empty windows to the one holding the next
+            # completion (the clock still lands on a window boundary)
+            if nxt > self.clock.now_s + window:
+                skip = int((nxt - self.clock.now_s) // window)
+                self.clock.advance(skip * window)
+                self._pump()
+            t1 = self.clock.now_s + window
+            batch = []
+            while self.queue and self.queue.peek_time() <= t1:
+                _, _, (i, _v) = self.queue.pop()
+                batch.append(i)
+                self._pump()
+            self.clock.advance_to(t1)
+            if not batch:
+                continue
+            idx = np.asarray(batch)
+            ids = tr.arrival_client[idx]
+            self.events += len(idx)
+            self._charge_co2(idx)
+            # the mixing budget buys as many passes as a typical peer
+            # exchange in this cohort costs (latency as the comm proxy)
+            per_step = float(np.median(tr.arrival_latency_s[idx]))
+            steps = max(1, min(64, int(window // max(per_step, 1e-6))))
+            x = self.bank.rows(ids)
+            x = x + cfg.lr * (self._z(ids) - x)
+            for _ in range(steps):
+                x = _ring_mix(x)
+            self.bank.update(ids, x)
+            self.updates += 1
+            if self.updates % 8 == 0:
+                self._mark()
+            with tracer.span("wave", wave=self.updates - 1, cohort=len(idx),
+                             steps=steps) as sp:
+                sp.set(sim_s=window, sim_time_s=self.clock.now_s)
+
+    # ------------------------------------------------------------------
+    def run(self, tracer=None, stop_after_updates: Optional[int] = None) -> dict:
+        """Drive the configured discipline to the horizon (or the update
+        cap); returns :meth:`report`.  Callable again after a checkpoint
+        restore — the trajectory continues exactly where it stopped."""
+        if tracer is None:
+            from repro.obs.trace import NULL_TRACER
+            tracer = NULL_TRACER
+        t0 = time.perf_counter()
+        if self.cfg.strategy == "sync":
+            self._run_sync(tracer, stop_after_updates)
+        elif self.cfg.strategy == "async_hier":
+            self._run_async(tracer, stop_after_updates)
+        else:
+            self._run_gossip(tracer, stop_after_updates)
+        self._host_s += time.perf_counter() - t0
+        # close the error curve only at a natural end: an early stop is a
+        # checkpoint point, and a resumed run must produce the identical curve
+        stopped = (stop_after_updates is not None
+                   and self.updates >= stop_after_updates)
+        if not stopped and (
+            not self.error_curve or self.error_curve[-1][0] != self.clock.now_s
+        ):
+            self._mark()
+        return self.report()
+
+    def report(self) -> dict:
+        """Machine-readable run summary (``BENCH_engine.json`` records and
+        the engine-smoke CI job both parse this)."""
+        host = self._host_s
+        err0 = float(np.linalg.norm(self.target))  # model starts at 0
+        return {
+            "schema": REPORT_SCHEMA,
+            "strategy": self.cfg.strategy,
+            "n_clients": self.trace.n_clients,
+            "n_regions": self.trace.n_regions,
+            "dim": self.cfg.dim,
+            "events": self.events,
+            "updates": self.updates,
+            "sim_hours": self.clock.hours,
+            "host_s": host,
+            "events_per_s": self.events / host if host > 0 else 0.0,
+            "initial_error": err0,
+            "final_error": self._error(),
+            "consensus": self.bank.consensus_distance(),
+            "co2_kg": self.co2_g / 1e3,
+            "active_clients": self.bank.n_active,
+            "peak_bank_bytes": self.bank.nbytes,
+            "error_curve": [[t, e] for t, e in self.error_curve[-64:]],
+        }
+
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "clock": self.clock.state_dict(),
+            "cursor": self.cursor.state_dict(),
+            "queue": self.queue.state_dict(pack=lambda p: [int(p[0]), int(p[1])]),
+            "bank": self.bank.state_dict(),
+            "g": self.g.copy(),
+            "version": self.version,
+            "buffers": {str(r): [[int(i), int(v)] for i, v in b]
+                        for r, b in self.buffers.items()},
+            "events": self.events,
+            "updates": self.updates,
+            "co2_g": self.co2_g,
+            "error_curve": [[float(t), float(e)] for t, e in self.error_curve],
+        }
+
+    def load_state_dict(self, s: dict) -> None:
+        self.clock.load_state_dict(s["clock"])
+        self.cursor.load_state_dict(s["cursor"])  # validates the trace hash
+        self.queue.load_state_dict(s["queue"], unpack=lambda p: (int(p[0]), int(p[1])))
+        self.bank.load_state_dict(s["bank"])
+        self.g = np.asarray(s["g"], np.float32).copy()
+        self.version = int(s["version"])
+        self.buffers = {int(r): [(int(i), int(v)) for i, v in b]
+                        for r, b in s["buffers"].items()}
+        self.events = int(s["events"])
+        self.updates = int(s["updates"])
+        self.co2_g = float(s["co2_g"])
+        self.error_curve = [(float(t), float(e)) for t, e in s["error_curve"]]
+
+
+def _ring_mix(x: np.ndarray) -> np.ndarray:
+    """One Metropolis–Hastings mixing pass on the cohort ring:
+    x_i ← ½x_i + ¼x_{i−1} + ¼x_{i+1} (uniform for k ≤ 2)."""
+    k = x.shape[0]
+    if k <= 1:
+        return x
+    if k == 2:
+        m = x.mean(axis=0, keepdims=True)
+        return np.repeat(m, 2, axis=0).astype(x.dtype)
+    return (0.5 * x + 0.25 * np.roll(x, 1, axis=0)
+            + 0.25 * np.roll(x, -1, axis=0)).astype(x.dtype)

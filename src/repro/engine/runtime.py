@@ -1,0 +1,148 @@
+"""Engine↔Federation bridge: trace-driven time for the training strategies.
+
+When ``ExperimentConfig.engine.trace`` is set, ``RuntimeContext`` builds an
+``EngineRuntime`` and the three strategies consult it instead of (or blended
+with) the analytic §III-D latency model:
+
+  * **sync** — each round is a barrier event: the clock advances by the
+    round's duration and, with ``latency_jitter > 0``, the reported
+    duration is modulated by the cohort's recorded latency draws.
+    ``latency_jitter == 0`` keeps the analytic duration *bitwise* — the
+    golden-equivalence anchor: a zero-jitter trace replay reproduces the
+    legacy round-loop history exactly.
+  * **async_hier** — per-client completion latencies come from the
+    client's recorded arrival stream (cycled), replacing the
+    ``latency_spread`` interpolation.
+  * **gossip** — rounds become time-budgeted waves: ``wave_budget_s``
+    buys as many mixing passes as the cohort's per-step transfer time
+    allows, and the clock advances by train + mixing time.
+
+Per-client latency streams: client ``i``'s recorded arrivals, in trace
+order, cycled when the run outlives the recording.  ``latency_jitter``
+interpolates ``(1-j)·analytic + j·recorded`` so a config can sweep from the
+legacy model (0) to the fully trace-driven one (1, default).
+
+State: clock + per-client stream cursors + the trace's content hash —
+checkpointed inside ``RuntimeContext.state_dict`` so kill→resume replays
+the same simulated timeline (and a resume against a different trace file
+fails loudly even when the path matches).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import carbon as carbon_mod
+from repro.engine import traces as traces_mod
+from repro.engine.clock import SimClock
+
+MAX_WAVE_STEPS = 64  # mixing passes one wave budget can buy, at most
+
+
+class EngineRuntime:
+    """Trace-driven simulated time shared by every strategy of one run."""
+
+    def __init__(self, trace: traces_mod.Trace, ecfg, n_clients: int,
+                 base_durs_s: np.ndarray):
+        if trace.n_clients < n_clients:
+            raise ValueError(
+                f"trace covers {trace.n_clients} clients but the experiment "
+                f"trains {n_clients}; record/generate a trace with at least "
+                "as many clients as TrainingConfig.n_clients"
+            )
+        self.trace = trace
+        self.cfg = ecfg
+        self.clock = SimClock()
+        self.base_durs = np.asarray(base_durs_s, np.float64)
+        self._hash = traces_mod.trace_hash(trace)
+        # per-client recorded-latency streams (arrival order, cycled)
+        self._streams: list[np.ndarray] = [
+            trace.arrival_latency_s[trace.arrival_client == i]
+            for i in range(n_clients)
+        ]
+        self._pos = np.zeros(n_clients, np.int64)
+
+    # ------------------------------------------------------------------
+    def next_latencies(self, sel) -> np.ndarray:
+        """Effective per-client latency for this dispatch of ``sel``:
+        ``(1-jitter)·analytic + jitter·recorded`` (clients with no recorded
+        arrivals fall back to the analytic model)."""
+        sel = np.atleast_1d(np.asarray(sel, np.int64))
+        j = float(self.cfg.latency_jitter)
+        out = np.empty(len(sel), np.float64)
+        for k, ci in enumerate(sel):
+            ci = int(ci)
+            base = self.base_durs[ci]
+            stream = self._streams[ci]
+            if j == 0.0 or len(stream) == 0:
+                out[k] = base
+            else:
+                rec = float(stream[self._pos[ci] % len(stream)])
+                self._pos[ci] += 1
+                out[k] = (1.0 - j) * base + j * rec
+        return out
+
+    # ------------------------------------------------------------------
+    def round_barrier(self, sel, analytic_dur_s: float) -> float:
+        """Advance the clock past one synchronous barrier round; returns
+        the simulated round duration.  Zero jitter advances by the analytic
+        duration exactly (the bitwise golden anchor); otherwise the barrier
+        waits for the slowest trace-drawn cohort member."""
+        if float(self.cfg.latency_jitter) == 0.0:
+            dur = float(analytic_dur_s)
+        else:
+            dur = float(np.max(self.next_latencies(sel))) + carbon_mod.ROUND_OVERHEAD_S
+        self.clock.advance(dur)
+        return dur
+
+    def completion_latencies(self, sel) -> np.ndarray:
+        """Async dispatch: per-client time-to-completion for ``sel``."""
+        return self.next_latencies(sel)
+
+    # ------------------------------------------------------------------
+    def wave_steps(self, fleet, sel, model_bytes: float) -> int:
+        """Gossip: mixing passes ``wave_budget_s`` pays for, given the
+        cohort's slowest peer-exchange time (2× model over the §III-D
+        bandwidth model, N_i = 1.0 ≈ 100 Mbps)."""
+        sel = np.atleast_1d(np.asarray(sel, np.int64))
+        bw = np.asarray(fleet.bandwidth)[sel]
+        per_step = float(np.max(2.0 * model_bytes / (bw * 100e6 / 8)))
+        return max(1, min(MAX_WAVE_STEPS, int(self.cfg.wave_budget_s // max(per_step, 1e-9))))
+
+    def gossip_wave(self, fleet, sel, model_bytes: float, steps: int,
+                    train_dur_s: float) -> float:
+        """Advance the clock by one wave: training plus the mixing passes'
+        transfer time; returns the wave's simulated duration."""
+        sel = np.atleast_1d(np.asarray(sel, np.int64))
+        bw = np.asarray(fleet.bandwidth)[sel]
+        per_step = float(np.max(2.0 * model_bytes / (bw * 100e6 / 8)))
+        dur = float(train_dur_s) + steps * per_step
+        self.clock.advance(dur)
+        return dur
+
+    # ------------------------------------------------------------------
+    def past_horizon(self, now_s=None) -> bool:
+        """True once simulated time passed ``sim_hours`` (0 = no cap).
+        Strategies with their own clock (async) pass their ``now``."""
+        h = float(self.cfg.sim_hours)
+        if h <= 0:
+            return False
+        now = self.clock.now_s if now_s is None else float(now_s)
+        return now >= h * 3600.0
+
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "clock": self.clock.state_dict(),
+            "pos": self._pos.copy(),
+            "trace_hash": self._hash,
+        }
+
+    def load_state_dict(self, s: dict) -> None:
+        if s["trace_hash"] != self._hash:
+            raise ValueError(
+                "engine trace mismatch: checkpoint was recorded against "
+                f"trace {s['trace_hash']}, this run loaded {self._hash} — "
+                "resume needs the identical trace content"
+            )
+        self.clock.load_state_dict(s["clock"])
+        self._pos = np.asarray(s["pos"], np.int64).copy()

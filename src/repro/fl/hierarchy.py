@@ -60,6 +60,18 @@ def staleness_weight(tau, cap: int = 10):
     return 1.0 / np.sqrt(1.0 + tau_c)
 
 
+def client_regions(n: int, n_regions: int) -> np.ndarray:
+    """Contiguous, balanced client→region map: ``region[i] = i*R // n``.
+
+    The fleet-agnostic assignment the trace generator and the replay engine
+    share (group sizes differ by at most one); :func:`assign_regions` below
+    is the fleet-aware variant that clusters by carbon phase instead.
+    """
+    if not 1 <= n_regions <= n:
+        raise ValueError(f"n_regions={n_regions} must be in [1, {n}]")
+    return (np.arange(n, dtype=np.int64) * n_regions) // n
+
+
 def assign_regions(fleet: carbon_mod.ProviderFleet, n_regions: int) -> list[np.ndarray]:
     """Cluster client indices into phase-coherent regions (grid zones).
 

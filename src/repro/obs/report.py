@@ -93,18 +93,26 @@ def gather(paths: Iterable[str]) -> dict:
 
 # ---------------------------------------------------------------------------
 def summarize_spans(rows: list[dict]) -> list[dict]:
-    """Per-name aggregate over span rows, ordered by total time desc."""
+    """Per-name aggregate over span rows, ordered by total time desc.
+
+    ``sim_s`` sums the simulated seconds engine-driven spans attribute to
+    the phase (``sim_s`` attr); phases that only stamp the clock position
+    (``sim_time_s``) report the furthest simulated instant they reached.
+    """
     agg: dict[str, dict] = {}
     for r in rows:
         a = agg.setdefault(r["name"], {
             "phase": r["name"], "count": 0, "total_s": 0.0,
-            "co2_g": 0.0, "bytes": 0.0,
+            "co2_g": 0.0, "bytes": 0.0, "sim_s": 0.0, "sim_time_max": 0.0,
         })
         a["count"] += 1
         a["total_s"] += r["dur_us"] / 1e6
         attrs = r.get("attrs") or {}
         a["co2_g"] += float(attrs.get("co2_g") or 0.0)
         a["bytes"] += float(attrs.get("bytes") or 0.0)
+        a["sim_s"] += float(attrs.get("sim_s") or 0.0)
+        if attrs.get("sim_time_s") is not None:
+            a["sim_time_max"] = max(a["sim_time_max"], float(attrs["sim_time_s"]))
     out = sorted(agg.values(), key=lambda a: -a["total_s"])
     wall = sum(r["dur_us"] / 1e6 for r in rows if r.get("depth", 0) == 0)
     for a in out:
@@ -152,18 +160,27 @@ def render(data: dict) -> str:
         )
     spans = data["spans"]
     if spans:
+        summary = summarize_spans(spans)
+        # the simulated-clock column appears only for engine-driven runs, so
+        # legacy (wall-clock-only) reports render exactly as before
+        has_sim = any(a["sim_s"] > 0 or a["sim_time_max"] > 0 for a in summary)
         lines.append("")
         lines.append("per-phase breakdown (spans):")
         lines.append(
             f"  {'phase':<14}{'count':>6}{'total_s':>10}{'mean_ms':>10}"
             f"{'%wall':>8}{'CO2_g':>10}{'MB':>10}"
+            + (f"{'sim_s':>12}" if has_sim else "")
         )
-        for a in summarize_spans(spans):
-            lines.append(
+        for a in summary:
+            row = (
                 f"  {a['phase']:<14}{a['count']:>6}{a['total_s']:>10.3f}"
                 f"{a['mean_ms']:>10.1f}{a['pct_wall']:>8.1f}"
                 f"{a['co2_g']:>10.1f}{a['bytes'] / 1e6:>10.2f}"
             )
+            if has_sim:
+                sim = a["sim_s"] or a["sim_time_max"]
+                row += f"{sim:>12.1f}" if sim > 0 else f"{'-':>12}"
+            lines.append(row)
     ev = summarize_events(data["events"]) if data["events"] else None
     if ev:
         lines.append("")

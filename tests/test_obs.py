@@ -384,3 +384,59 @@ def test_report_cli_summarizes_run_dir(observed_runs, capsys):
     rc = report_mod.main([observed_runs["gossip"]["dir"]])
     out = capsys.readouterr().out
     assert rc == 0 and "mix" in out and "final consensus distance" in out
+
+
+# ---------------------------------------------------------------------------
+# simulated-clock column (engine-driven runs)
+# ---------------------------------------------------------------------------
+
+
+def test_report_sim_clock_column_from_engine_spans(tmp_path):
+    """Engine-driven spans attribute simulated time (``sim_s`` per phase,
+    ``sim_time_s`` clock stamps): the summary aggregates them and the
+    rendered table gains a ``sim_s`` column — sum for phases that account
+    simulated duration, furthest clock instant for ones that only stamp it,
+    '-' for phases the simulated clock never touched."""
+    path = str(tmp_path / "trace.jsonl")
+    tr = obs.Tracer(jsonl_path=path, clock=_ticking_clock())
+    with tr.span("round", round=0) as sp:
+        sp.set(sim_s=120.0, sim_time_s=120.0)
+    with tr.span("round", round=1) as sp:
+        sp.set(sim_s=240.0, sim_time_s=360.0)
+    with tr.span("flush") as sp:
+        sp.set(sim_time_s=500.0)  # stamp only: no per-phase duration
+    with tr.span("eval"):
+        pass  # untouched by the simulated clock
+    tr.close()
+
+    rows = obs.read_spans(path)
+    agg = {a["phase"]: a for a in report_mod.summarize_spans(rows)}
+    assert agg["round"]["sim_s"] == 360.0          # summed across rounds
+    assert agg["round"]["sim_time_max"] == 360.0   # furthest instant
+    assert agg["flush"]["sim_s"] == 0.0
+    assert agg["flush"]["sim_time_max"] == 500.0
+    assert agg["eval"]["sim_s"] == 0.0 and agg["eval"]["sim_time_max"] == 0.0
+
+    out = report_mod.render({"spans": rows, "events": [], "manifest": None})
+    header = next(l for l in out.splitlines() if l.startswith("  phase"))
+    assert header.rstrip().endswith("sim_s")
+    by_line = {l.split()[0]: l for l in out.splitlines() if l.startswith("  ")}
+    assert by_line["round"].rstrip().endswith("360.0")
+    assert by_line["flush"].rstrip().endswith("500.0")  # clock-stamp fallback
+    assert by_line["eval"].rstrip().endswith("-")
+
+
+def test_report_without_sim_attrs_renders_legacy_table(tmp_path):
+    """Wall-clock-only runs must render exactly as before: no sim column."""
+    path = str(tmp_path / "trace.jsonl")
+    tr = obs.Tracer(jsonl_path=path, clock=_ticking_clock())
+    with tr.span("round", round=0) as sp:
+        sp.set(co2_g=5.0)
+    with tr.span("eval"):
+        pass
+    tr.close()
+    out = report_mod.render(
+        {"spans": obs.read_spans(path), "events": [], "manifest": None}
+    )
+    assert "sim_s" not in out
+    assert "per-phase breakdown" in out

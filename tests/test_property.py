@@ -11,6 +11,8 @@ from repro.api.pipeline import (AggregationContext, ClipStage, MaskStage,
                                 PrivacyPipeline, QuantizeStage, TopKStage,
                                 fuse_pipeline)
 from repro.checkpoint import load_state, pack_tree, save_state, unpack_tree
+from repro.engine import EventQueue, synthetic_trace, trace_hash
+from repro.engine import traces as engine_traces
 from repro.fl.paramspace import ParamSpace
 from repro.kernels import compress as compress_mod
 from repro.privacy import quantize, secure_agg
@@ -412,3 +414,77 @@ def test_unpack_tree_rejects_any_single_mutation(tree, mode, pick):
         del packed["leaves"][name]
     with pytest.raises(ValueError):
         unpack_tree(packed, tree)
+
+
+# ---------------------------------------------------------------------------
+# repro.engine: trace round-trip identity + event-queue ordering (PR 9)
+# ---------------------------------------------------------------------------
+@given(
+    st.integers(min_value=4, max_value=40),             # n_clients
+    st.floats(min_value=0.1, max_value=6.0),            # sim_hours
+    st.integers(min_value=1, max_value=4),              # n_regions
+    st.floats(min_value=0.2, max_value=8.0),            # arrivals/client/h
+    st.integers(min_value=0, max_value=10**6),          # seed
+    st.sampled_from(["jsonl", "npz"]),
+)
+@settings(**SET)
+def test_trace_roundtrip_identity(tmp_path_factory, n, hours, regions, rate,
+                                  seed, ext):
+    """save→load is the identity for BOTH on-disk forms: header equal,
+    every array bitwise equal (jsonl floats survive via shortest-repr),
+    and the content hash — the resume guard — unchanged."""
+    trace = synthetic_trace(n, hours, n_regions=regions,
+                            rate_per_client_per_h=rate, seed=seed)
+    path = str(tmp_path_factory.getbasetemp() / f"trace-prop.{ext}")
+    trace.save(path)
+    back = engine_traces.load(path)
+    assert back.header == trace.header
+    for f in ("arrival_t_s", "arrival_client", "arrival_latency_s",
+              "carbon_t_s", "carbon_intensity"):
+        a, b = getattr(trace, f), getattr(back, f)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+    assert trace_hash(back) == trace_hash(trace)
+
+
+# few distinct times -> many ties, exercising the FIFO tie-break contract
+_event_times = st.one_of(
+    st.sampled_from([0.0, 1.0, 2.0, 3.0]),
+    st.floats(min_value=0.0, max_value=100.0,
+              allow_nan=False, allow_infinity=False),
+)
+
+
+@given(st.lists(_event_times, max_size=120))
+@settings(**SET)
+def test_event_queue_time_ordered_with_stable_ties(times):
+    """Pops are globally time-ordered and, among equal times, FIFO in
+    insertion order — for ANY push sequence."""
+    q = EventQueue()
+    for k, t in enumerate(times):
+        q.push(t, k)  # payload = insertion index
+    popped = [q.pop() for _ in range(len(q))]
+    assert not q and q.peek_time() is None
+    ts = [t for t, _, _ in popped]
+    assert ts == sorted(ts)
+    for (t1, _, k1), (t2, _, k2) in zip(popped, popped[1:]):
+        if t1 == t2:
+            assert k1 < k2  # stable: earlier push pops first
+    # nothing lost, nothing duplicated
+    assert sorted(k for _, _, k in popped) == list(range(len(times)))
+
+
+@given(st.lists(_event_times, max_size=80), st.integers(0, 80))
+@settings(**SET)
+def test_event_queue_checkpoint_pops_identically(times, consume):
+    """state_dict→load_state_dict at ANY point mid-drain: the restored
+    queue pops the identical remaining (t, seq, payload) sequence."""
+    q = EventQueue()
+    for k, t in enumerate(times):
+        q.push(t, k)
+    for _ in range(min(consume, len(q))):
+        q.pop()
+    q2 = EventQueue()
+    q2.load_state_dict(q.state_dict())
+    assert [q2.pop() for _ in range(len(q2))] == \
+           [q.pop() for _ in range(len(q))]

@@ -1,0 +1,176 @@
+"""Observability overhead benchmarks: per-event cost of the obs v2 layer.
+
+The engine-scale observability claim is that *watching* a run is cheap and
+bounded: folding a typed event into the metrics registry, the health
+monitor, or a simulated-time timeline is O(1), a sampled span costs little
+more than its stats rollup, and a fully observed replay stays within a few
+percent of the unobserved one.  Each bench pushes a synthetic stream
+through one component and records events per wall-second — the perf-gate
+metric (CI fails if any drops >30% vs the committed ``BENCH_obs.json``,
+via the shared ``benchmarks.common.check_regression``):
+
+  * ``obs_sink/metrics``    MetricsSink.emit (counter/gauge/histogram folds)
+  * ``obs_sink/health``     HealthMonitor.emit (all detectors armed)
+  * ``obs_timeline/record`` Timeline.record incl. bin-doubling compaction
+  * ``obs_tracer/sampled``  1%-sampled spans with full SpanStats rollups
+  * ``obs_hist/streaming``  raw StreamingHistogram.observe
+  * ``engine_replay_observed/sync``  a full replay with every obs piece on
+    (tracer + metrics + health + timeline), reported as replay events/s —
+    the end-to-end overhead gate
+
+Record schema matches ``kernel_bench``/``engine_bench`` ``(op, shape,
+backend)`` keying so one ``check_regression`` covers all three files.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import check_regression as common_check_regression
+from benchmarks.common import csv_line
+from repro import obs
+from repro.api.telemetry import RoundEvent
+from repro.engine import ReplayConfig, ReplayEngine, synthetic_trace
+
+RECORDS: list[dict] = []
+
+N_EVENTS = 100_000
+
+
+def _event_stream(n: int) -> list[RoundEvent]:
+    return [
+        RoundEvent(round=i, acc=0.0, loss=1.0 / (i + 1), co2_g=0.1,
+                   cum_co2_g=0.1 * i, duration_s=30.0 + (i % 7), reward=0.0,
+                   eps_spent=0.0, selected=(), wire_bytes=1024.0,
+                   sim_time_s=0.5 * i)
+        for i in range(n)
+    ]
+
+
+def _bench(op: str, n: int, fn, derived=None) -> str:
+    t0 = time.time()
+    fn()
+    wall = time.time() - t0
+    ev_per_s = n / wall if wall > 0 else 0.0
+    RECORDS.append({
+        "op": op, "shape": [n], "backend": "cpu:python",
+        "ms": wall * 1e3, "events_per_s": ev_per_s,
+        "us_per_event": wall * 1e6 / n,
+    })
+    extra = derived() if derived else ""  # lazily, AFTER the benched body ran
+    return csv_line(op.replace("/", "_"), wall * 1e6 / n,
+                    f"events_per_s={ev_per_s:.0f}" + (f";{extra}" if extra else ""))
+
+
+def bench_components(n: int) -> list[str]:
+    rows = []
+    events = _event_stream(n)
+
+    sink = obs.MetricsSink()
+    rows.append(_bench("obs_sink/metrics", n,
+                       lambda: [sink.emit(e) for e in events]))
+    h = sink.registry.histogram("duration_s")
+    assert h.streaming, "bench stream must be past the spill threshold"
+
+    hm = obs.HealthMonitor(eps_budget=1e9, carbon_budget_g=1e9)
+    rows.append(_bench("obs_sink/health", n,
+                       lambda: [hm.emit(e) for e in events],
+                       derived=lambda: f"alerts={sum(hm.counts.values())}"))
+
+    tl = obs.Timeline()
+
+    def _timeline():
+        for e in events:
+            tl.record("events", e.sim_time_s, 1.0)
+            tl.record("co2_g", e.sim_time_s, e.co2_g)
+    rows.append(_bench("obs_timeline/record", 2 * n, _timeline,
+                       derived=lambda: f"bins={tl.n_bins};bin_s={tl.bin_s:g}"))
+
+    tr = obs.Tracer(sample=0.01)
+
+    def _spans():
+        for i in range(n):
+            with tr.span("round", round=i):
+                pass
+    rows.append(_bench("obs_tracer/sampled", n, _spans,
+                       derived=lambda: f"kept={len(tr.spans)}"))
+
+    sh = obs.StreamingHistogram()
+    rows.append(_bench("obs_hist/streaming", n,
+                       lambda: [sh.observe(30.0 + (i % 997)) for i in range(n)],
+                       derived=lambda: f"buckets={sh.n_buckets}"))
+    return rows
+
+
+def bench_observed_replay(n_clients: int = 10_000, sim_hours: float = 1.0) -> list[str]:
+    trace = synthetic_trace(n_clients, sim_hours, seed=0)
+    cfg = ReplayConfig(strategy="sync", dim=32, seed=0)
+
+    t0 = time.time()
+    plain = ReplayEngine(trace, cfg).run()
+    plain_wall = time.time() - t0
+
+    eng = ReplayEngine(trace, cfg)
+    tracer = obs.Tracer(sample=0.01)
+    sinks = [obs.MetricsSink(), obs.HealthMonitor()]
+    tl = obs.Timeline()
+    t0 = time.time()
+    rep = eng.run(tracer=tracer, telemetry=sinks, timeline=tl)
+    wall = time.time() - t0
+
+    ev_per_s = rep["events"] / wall if wall > 0 else 0.0
+    overhead = 100.0 * (wall - plain_wall) / plain_wall if plain_wall > 0 else 0.0
+    RECORDS.append({
+        "op": "engine_replay_observed/sync",
+        "shape": [n_clients, cfg.dim],
+        "backend": "cpu:numpy",
+        "ms": wall * 1e3, "events_per_s": ev_per_s,
+        "events": rep["events"], "updates": rep["updates"],
+        "overhead_pct_vs_unobserved": overhead,
+    })
+    return [csv_line(
+        f"engine_replay_observed_sync_n{n_clients}", wall * 1e6,
+        f"events_per_s={ev_per_s:.0f};overhead_pct={overhead:.1f};"
+        f"updates={rep['updates']};tl_bins={tl.n_bins}",
+    )]
+
+
+def main(out_json: str | None = "BENCH_obs.json", n: int = N_EVENTS):
+    RECORDS.clear()
+    rows = bench_components(n)
+    rows += bench_observed_replay()
+    for r in rows:
+        print(r)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(RECORDS, f, indent=1)
+        print(f"wrote {len(RECORDS)} records -> {out_json}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=N_EVENTS,
+                    help="events per component bench")
+    ap.add_argument("--json", default="BENCH_obs.json",
+                    help="machine-readable output path ('' disables)")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="regression mode: fail (exit 1) if any component's "
+                         "events/sec drops >30%% vs this committed baseline")
+    args = ap.parse_args()
+    baseline = None
+    if args.check:
+        # read BEFORE main(), which may rewrite the same path via --json
+        with open(args.check) as f:
+            baseline = json.load(f)
+    main(out_json=args.json or None, n=args.n)
+    if baseline is not None:
+        failures = common_check_regression(RECORDS, baseline,
+                                           metric="events_per_s")
+        if failures:
+            print(f"PERF REGRESSION vs {args.check}:")
+            for f in failures:
+                print(f"  {f}")
+            raise SystemExit(1)
+        print(f"perf check vs {args.check}: OK ({len(RECORDS)} records)")

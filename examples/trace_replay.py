@@ -17,8 +17,16 @@ population (``repro.engine.ClientBank`` lazy row banks):
 line-diffable form, ``.npz`` for the compact one) — replaying a saved trace
 reproduces the identical simulated history, which is what makes engine runs
 comparable across machines and PRs.  ``--obs DIR`` additionally writes the
-``repro.obs`` artifact bundle; ``python -m repro.obs.report DIR`` then shows
-the simulated-clock column next to the wall-clock one.
+full ``repro.obs`` v2 bundle — sampled spans + rollups, typed events,
+metrics, health alerts, and a simulated-time ``timeline.json`` per strategy
+(the first strategy claims the unnamed ``timeline.json``); then
+
+    python -m repro.obs.report DIR --strict    # summary; exit 2 on error alerts
+    python -m repro.obs.watch DIR --once       # live rates / sim progress
+
+read it back.  ``--obs-sample`` tunes the span sampling rate (default 1 in
+100 — at 10⁵ updates the full span list would defeat the memory bound the
+engine exists for).
 """
 import argparse
 import json
@@ -47,7 +55,11 @@ def main():
     ap.add_argument("--out", metavar="FILE",
                     help="write the per-strategy replay reports as JSON")
     ap.add_argument("--obs", metavar="DIR",
-                    help="write repro.obs run artifacts (sim-clock spans) here")
+                    help="write the repro.obs artifact bundle (spans + rollups, "
+                         "events, metrics, timeline, health) here")
+    ap.add_argument("--obs-sample", type=float, default=0.01,
+                    help="span sampling rate for --obs (default 0.01; "
+                         "rollups still cover every span)")
     args = ap.parse_args()
 
     if args.trace:
@@ -63,14 +75,20 @@ def main():
         trace.save(args.save_trace)
         print(f"saved trace -> {args.save_trace}")
 
-    arts = obs.RunArtifacts(args.obs) if args.obs else None
+    arts = obs.RunArtifacts(args.obs, sample=args.obs_sample) if args.obs else None
     strategies = [s.strip() for s in args.strategies.split(",") if s.strip()]
     reports = []
-    for strat in strategies:
+    for i, strat in enumerate(strategies):
         eng = ReplayEngine(trace, ReplayConfig(
             strategy=strat, dim=args.dim, seed=args.seed, sim_hours=cap_h,
         ))
-        rep = eng.run(tracer=arts.tracer if arts else None)
+        if arts:
+            # first strategy claims the unnamed timeline.json; the rest
+            # get timeline_<strategy>.json alongside it
+            tl = arts.new_timeline(None if i == 0 else strat)
+            rep = eng.run(tracer=arts.tracer, telemetry=arts.sinks, timeline=tl)
+        else:
+            rep = eng.run()
         reports.append(rep)
         print(f"{strat:>10}: {rep['updates']} updates over {rep['events']} "
               f"events, {rep['sim_hours']:.2f} sim h in {rep['host_s']:.2f} s "

@@ -247,6 +247,7 @@ class GossipStrategy:
                     eps_spent=0.0, selected=tuple(int(c) for c in sel),
                     consensus=self.consensus, spectral_gap=gap,
                     mix_steps=steps, mix_bytes=mix_bytes,
+                    sim_time_s=ctx.engine.clock.now_s if ctx.engine is not None else 0.0,
                 ))
             self.start_round = rnd + 1
             ctx.checkpoint_round(self, rnd)

@@ -208,6 +208,7 @@ class SyncStrategy:
                     co2_g=co2, cum_co2_g=self.cum_co2, duration_s=dur, reward=r,
                     eps_spent=eps_spent, selected=tuple(int(c) for c in sel),
                     wire_bytes=wire,
+                    sim_time_s=ctx.engine.clock.now_s if ctx.engine is not None else 0.0,
                 ))
             self.start_round = rnd + 1
             ctx.checkpoint_round(self, rnd)

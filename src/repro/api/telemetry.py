@@ -39,6 +39,10 @@ class RoundEvent:
     # pipeline's StageRecords (ring bits, top-k density) — 0.0 means "not
     # priced" and consumers fall back to the 2·|cohort|·model_bytes estimate
     wire_bytes: float = 0.0
+    # simulated-clock time of the event (event-driven engines stamp it;
+    # batch runs leave 0.0).  All event construction is keyword-based, so
+    # hoisting this from FlushEvent into the base is order-safe.
+    sim_time_s: float = 0.0
 
     def history_row(self) -> dict:
         """The legacy per-round history columns this event carries."""
@@ -47,7 +51,7 @@ class RoundEvent:
             "cum_co2_g": self.cum_co2_g, "duration_s": self.duration_s,
             "reward": self.reward, "loss": self.loss,
             "eps_spent": self.eps_spent, "selected": list(self.selected),
-            "wire_bytes": self.wire_bytes,
+            "wire_bytes": self.wire_bytes, "sim_time_s": self.sim_time_s,
         }
 
 
@@ -57,12 +61,10 @@ class FlushEvent(RoundEvent):
 
     staleness: float = 0.0   # mean client->edge staleness of the flushed cohort
     region: int = 0          # edge region that flushed
-    sim_time_s: float = 0.0  # event-clock time of the flush
 
     def history_row(self) -> dict:
         row = super().history_row()
-        row.update(staleness=self.staleness, region=self.region,
-                   sim_time_s=self.sim_time_s)
+        row.update(staleness=self.staleness, region=self.region)
         return row
 
 

@@ -38,6 +38,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.api.telemetry import FlushEvent, MixEvent, RoundEvent
 from repro.core import carbon as carbon_mod
 from repro.engine.clock import SimClock
 from repro.engine.events import EventQueue
@@ -101,6 +102,12 @@ class ReplayEngine:
         self.co2_g = 0.0
         self.error_curve: list[tuple[float, float]] = []  # (sim_s, error)
         self._host_s = 0.0
+        # observation plumbing (set per run(); never part of state_dict —
+        # observing a run must not change what the run computes)
+        self._sinks: tuple = ()
+        self._tl = None
+        self._co2_seen = 0.0
+        self._ev_seen = 0
         horizon = trace.horizon_s
         if cfg.sim_hours > 0:
             horizon = min(horizon, cfg.sim_hours * 3600.0)
@@ -135,6 +142,54 @@ class ReplayEngine:
     def _mark(self):
         self.error_curve.append((self.clock.now_s, self._error()))
 
+    def _observe(self, dur: float, cohort: int, loss: float, *,
+                 region: int = 0, staleness: float = 0.0,
+                 consensus: float = 0.0, steps: int = 0) -> None:
+        """Fold one applied update into the run's telemetry sinks and
+        timeline.  Purely read-only with respect to the protocol state —
+        it prices wire bytes and takes CO₂/event *deltas* since the last
+        observation, so an observed run and an unobserved one produce
+        bitwise-identical trajectories (``tests/test_obs.py`` asserts it).
+        """
+        now = self.clock.now_s
+        co2 = self.co2_g - self._co2_seen
+        n_ev = self.events - self._ev_seen
+        self._co2_seen = self.co2_g
+        self._ev_seen = self.events
+        st = self.cfg.strategy
+        # float32 model rows down+up per cohort member; gossip pays per pass
+        wire = 2.0 * cohort * self.cfg.dim * 4.0
+        if st == "gossip":
+            wire *= steps
+        if self._tl is not None:
+            tl = self._tl
+            tl.record("events", now, n_ev)
+            tl.record("co2_g", now, co2)
+            tl.record("wire_bytes", now, wire)
+            tl.record("error", now, loss, kind="last")
+            tl.record("active_clients", now, self.bank.n_active, kind="max")
+            if st == "async_hier":
+                tl.record("staleness", now, staleness, kind="mean")
+            elif st == "gossip":
+                tl.record("consensus", now, consensus, kind="last")
+        if self._sinks:
+            # acc has no meaning in the consensus workload: loss (= distance
+            # to z*) is the learning signal; selected stays empty so a
+            # 10⁵-cohort round does not materialize a 10⁵-tuple per event
+            common = dict(round=self.updates - 1, acc=0.0, loss=loss,
+                          co2_g=co2, cum_co2_g=self.co2_g, duration_s=dur,
+                          reward=0.0, eps_spent=0.0, selected=(),
+                          wire_bytes=wire, sim_time_s=now)
+            if st == "sync":
+                ev = RoundEvent(**common)
+            elif st == "async_hier":
+                ev = FlushEvent(staleness=staleness, region=region, **common)
+            else:
+                ev = MixEvent(consensus=consensus, mix_steps=steps,
+                              mix_bytes=wire, **common)
+            for s in self._sinks:
+                s.emit(ev)
+
     # ------------------------------------------------------------------
     # sync: barrier rounds over consecutive arrival cohorts
     # ------------------------------------------------------------------
@@ -160,6 +215,8 @@ class ReplayEngine:
                 self.updates += 1
                 self._mark()
                 sp.set(sim_s=dt, sim_time_s=self.clock.now_s, co2_g=co2)
+            if self._sinks or self._tl is not None:
+                self._observe(dt, len(idx), self.error_curve[-1][1])
 
     # ------------------------------------------------------------------
     # async: trace-driven completions into per-region FedBuff buffers
@@ -212,6 +269,10 @@ class ReplayEngine:
                     sp.set(sim_s=float(np.mean(tr.arrival_latency_s[idx])),
                            sim_time_s=self.clock.now_s,
                            staleness=float(np.mean(tau)))
+                if self._sinks or self._tl is not None:
+                    self._observe(float(np.mean(tr.arrival_latency_s[idx])),
+                                  len(idx), self.error_curve[-1][1],
+                                  region=r, staleness=float(np.mean(tau)))
 
     # ------------------------------------------------------------------
     # gossip: time-budgeted mixing waves over each window's completions
@@ -260,15 +321,51 @@ class ReplayEngine:
             with tracer.span("wave", wave=self.updates - 1, cohort=len(idx),
                              steps=steps) as sp:
                 sp.set(sim_s=window, sim_time_s=self.clock.now_s)
+            if self._sinks or self._tl is not None:
+                # cohort-local readouts: fleet-wide ones cost O(active·dim)
+                # per wave, which would make observation the hot path
+                xm = x.mean(axis=0)
+                self._observe(
+                    window, len(idx),
+                    float(np.linalg.norm(xm - self.target)),
+                    consensus=float(np.mean(np.linalg.norm(x - xm, axis=1))),
+                    steps=steps,
+                )
 
     # ------------------------------------------------------------------
-    def run(self, tracer=None, stop_after_updates: Optional[int] = None) -> dict:
+    def run(self, tracer=None, stop_after_updates: Optional[int] = None,
+            telemetry=None, timeline=None) -> dict:
         """Drive the configured discipline to the horizon (or the update
         cap); returns :meth:`report`.  Callable again after a checkpoint
-        restore — the trajectory continues exactly where it stopped."""
+        restore — the trajectory continues exactly where it stopped.
+
+        ``telemetry`` is a ``TelemetrySink`` or an iterable of them: the
+        engine emits one typed event per applied update (``RoundEvent`` per
+        sync round, ``FlushEvent`` per async flush, ``MixEvent`` per gossip
+        wave), so ``MetricsSink``/``JsonlSink``/``HealthMonitor`` work on
+        engine runs exactly as on batch federations.  ``timeline`` is a
+        :class:`~repro.obs.timeline.Timeline` to bin the run's series
+        against simulated time (the trace's regional carbon curves are
+        folded in once, capped at the engine's horizon).  Observation is
+        read-only: the protocol trajectory is bitwise identical with or
+        without it.
+        """
         if tracer is None:
             from repro.obs.trace import NULL_TRACER
             tracer = NULL_TRACER
+        if telemetry is None:
+            self._sinks = ()
+        elif hasattr(telemetry, "emit"):
+            self._sinks = (telemetry,)
+        else:
+            self._sinks = tuple(telemetry)
+        self._tl = timeline
+        self._co2_seen = self.co2_g
+        self._ev_seen = self.events
+        if timeline is not None and not any(
+            n.startswith("carbon_intensity/") for n in timeline.series_names
+        ):
+            timeline.record_carbon(self.trace, self.horizon_s)
         t0 = time.perf_counter()
         if self.cfg.strategy == "sync":
             self._run_sync(tracer, stop_after_updates)

@@ -1,16 +1,24 @@
 """``repro.obs`` — observability for federation runs.
 
-Four pieces, composable à la carte or bundled via :class:`RunArtifacts`:
+Seven pieces, composable à la carte or bundled via :class:`RunArtifacts`:
 
-    trace.py    nestable span :class:`Tracer` on monotonic clocks (no-op
-                :class:`NullTracer` default), Chrome-trace/Perfetto export,
-                streaming span JSONL
-    metrics.py  :class:`MetricsRegistry` (Counter/Gauge/Histogram) and the
-                :class:`MetricsSink` that folds the typed event stream into
-                bytes/CO₂/eps/consensus aggregates
-    sinks.py    crash-safe :class:`JsonlSink` event log + :func:`read_events`
-                round-trip
-    runinfo.py  self-describing run manifests (:func:`write_manifest`)
+    trace.py     nestable span :class:`Tracer` on monotonic clocks (no-op
+                 :class:`NullTracer` default), deterministic span sampling +
+                 per-name :class:`SpanStats` rollups, Chrome-trace/Perfetto
+                 export, streaming span JSONL
+    metrics.py   :class:`MetricsRegistry` (Counter/Gauge/Histogram) and the
+                 :class:`MetricsSink` that folds the typed event stream into
+                 bytes/CO₂/eps/consensus aggregates
+    streaming.py bounded-memory :class:`StreamingHistogram` (log buckets,
+                 relative-error quantiles) + :class:`WindowedRate` — the
+                 engine-scale backends the exact structures spill into
+    timeline.py  :class:`Timeline` — simulated-time-binned series with
+                 bin-doubling compaction, written as ``timeline.json``
+    health.py    :class:`HealthMonitor` — typed :class:`HealthEvent` alerts
+                 (NaN/divergence, stragglers, ε/carbon budgets, sim stalls)
+    sinks.py     crash-safe :class:`JsonlSink` event log + :func:`read_events`
+                 round-trip
+    runinfo.py   self-describing run manifests (:func:`write_manifest`)
 
 Quick tour — a fully observed run::
 
@@ -25,24 +33,32 @@ Quick tour — a fully observed run::
 
 leaves ``out/run1/`` holding ``trace.jsonl`` (span stream), ``trace.json``
 (Chrome trace — open in https://ui.perfetto.dev), ``events.jsonl`` (typed
-event log), ``metrics.json`` (aggregates) and ``run.json`` (manifest); then
+event log), ``metrics.json`` (aggregates), ``spans_rollup.json`` (per-name
+span stats over *every* span, sampled or not), ``health.json`` (alerts) and
+``run.json`` (manifest) — plus ``timeline.json`` when the run binned series
+via :meth:`RunArtifacts.new_timeline`; then
 
-    python -m repro.obs.report out/run1
+    python -m repro.obs.report out/run1          # + --strict to gate on alerts
+    python -m repro.obs.watch  out/run1          # live tailer for in-progress runs
 
-prints the per-phase time/bytes/CO₂ breakdown.
+print the per-phase time/bytes/CO₂ breakdown and the live rates/ETA.
 """
 from __future__ import annotations
 
 import os
 from typing import Optional
 
+from repro.obs.health import (HEALTH_SCHEMA, HealthEvent, HealthMonitor,
+                              read_health)
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                MetricsSink)
 from repro.obs.runinfo import (MANIFEST_SCHEMA, collect, config_hash,
                                read_manifest, write_manifest)
 from repro.obs.sinks import EVENT_TYPES, JsonlSink, read_events
-from repro.obs.trace import (NULL_TRACER, NullTracer, SpanRecord, Tracer,
-                             read_spans)
+from repro.obs.streaming import StreamingHistogram, WindowedRate
+from repro.obs.timeline import (TIMELINE_SCHEMA, Timeline, read_timeline)
+from repro.obs.trace import (NULL_TRACER, NullTracer, SpanRecord, SpanStats,
+                             Tracer, read_spans)
 
 
 class RunArtifacts:
@@ -61,26 +77,53 @@ class RunArtifacts:
     EVENTS_JSONL = "events.jsonl"
     METRICS_JSON = "metrics.json"
     MANIFEST_JSON = "run.json"
+    ROLLUP_JSON = "spans_rollup.json"
+    HEALTH_JSON = "health.json"
+    TIMELINE_JSON = "timeline.json"
 
     def __init__(self, out_dir: str, *, model_bytes: float = 0.0,
-                 fsync: bool = False):
+                 fsync: bool = False, sample: float = 1.0,
+                 max_spans: Optional[int] = None,
+                 health: Optional[HealthMonitor] = None):
         self.out_dir = out_dir
         os.makedirs(out_dir, exist_ok=True)
-        self.tracer = Tracer(jsonl_path=os.path.join(out_dir, self.TRACE_JSONL))
+        self.tracer = Tracer(jsonl_path=os.path.join(out_dir, self.TRACE_JSONL),
+                             sample=sample, max_spans=max_spans)
         self.events = JsonlSink(os.path.join(out_dir, self.EVENTS_JSONL), fsync=fsync)
         self.metrics = MetricsSink(model_bytes=model_bytes)
+        self.health = health if health is not None else HealthMonitor()
+        self._timelines: dict[Optional[str], Timeline] = {}
 
     @property
     def sinks(self) -> list:
-        return [self.events, self.metrics]
+        return [self.events, self.metrics, self.health]
+
+    def new_timeline(self, name: Optional[str] = None, **kw) -> Timeline:
+        """Register a :class:`Timeline` the bundle will write at finalize —
+        ``timeline.json`` for the unnamed one, ``timeline_<name>.json``
+        otherwise (so one bundle can hold one timeline per strategy)."""
+        if name in self._timelines:
+            raise ValueError(f"timeline {name!r} already registered")
+        tl = self._timelines[name] = Timeline(**kw)
+        return tl
+
+    def timeline_path(self, name: Optional[str] = None) -> str:
+        fn = self.TIMELINE_JSON if name is None else f"timeline_{name}.json"
+        return os.path.join(self.out_dir, fn)
 
     def finalize(self, *, cfg=None, strategy: Optional[str] = None,
                  mesh_shape=None, summary: Optional[dict] = None) -> dict:
-        """Write trace.json / metrics.json / run.json; returns the manifest."""
+        """Write the derived artifacts (Chrome trace, span rollups, metrics,
+        health, timelines, run manifest) and close the streams; returns the
+        manifest."""
         self.tracer.export_chrome(os.path.join(self.out_dir, self.TRACE_CHROME))
+        self.tracer.export_rollup(os.path.join(self.out_dir, self.ROLLUP_JSON))
         self.tracer.close()
         self.events.close()
         self.metrics.to_json(os.path.join(self.out_dir, self.METRICS_JSON))
+        self.health.to_json(os.path.join(self.out_dir, self.HEALTH_JSON))
+        for name, tl in self._timelines.items():
+            tl.save(self.timeline_path(name))
         extra = {"summary": summary} if summary else None
         return write_manifest(
             os.path.join(self.out_dir, self.MANIFEST_JSON),
@@ -92,6 +135,9 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "MetricsSink",
     "MANIFEST_SCHEMA", "collect", "config_hash", "read_manifest",
     "write_manifest", "EVENT_TYPES", "JsonlSink", "read_events",
-    "NULL_TRACER", "NullTracer", "SpanRecord", "Tracer", "read_spans",
+    "NULL_TRACER", "NullTracer", "SpanRecord", "SpanStats", "Tracer",
+    "read_spans", "StreamingHistogram", "WindowedRate",
+    "TIMELINE_SCHEMA", "Timeline", "read_timeline",
+    "HEALTH_SCHEMA", "HealthEvent", "HealthMonitor", "read_health",
     "RunArtifacts",
 ]

@@ -1,0 +1,228 @@
+"""Live health monitoring: typed alerts folded from the event stream.
+
+:class:`HealthMonitor` implements the ``repro.api.telemetry.TelemetrySink``
+protocol, so it rides the same event stream as ``MetricsSink``/``JsonlSink``
+and works unchanged on batch federations and 10⁵-update engine replays.
+Each emitted event is checked against a small set of detectors, and a
+violation produces a typed :class:`HealthEvent`:
+
+    nan          loss went non-finite — the run is numerically dead (error)
+    divergence   loss blew up past ``divergence_factor`` × its best (warn)
+    straggler    an event's duration z-score against the running latency
+                 EMA exceeded ``z_thresh`` — a slow region/cohort (warn)
+    eps_budget   cumulative ε crossed the configured privacy budget (error)
+    carbon_budget cumulative CO₂ crossed the configured gram budget (error)
+    sim_stall    simulated time stopped advancing for ``stall_after_events``
+                 consecutive events — a wedged replay (warn)
+
+The monitor is itself bounded: per-kind violation *counts* are exact, but
+at most ``max_alerts_per_kind`` full :class:`HealthEvent` records are
+retained per kind, so a run that stragglers on every event cannot grow the
+monitor without bound.  Budget alarms fire once (a budget stays crossed).
+
+``python -m repro.obs.report`` renders the snapshot as an "Alerts" section
+and ``--strict`` exits nonzero when any error-severity alert fired.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Optional
+
+from repro.api.telemetry import FlushEvent, RoundEvent
+
+HEALTH_SCHEMA = "metafed-health/v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthEvent:
+    """One detected violation; ``severity`` is ``"warn"`` or ``"error"``."""
+
+    kind: str
+    severity: str
+    message: str
+    sim_time_s: float = 0.0
+    context: dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class HealthMonitor:
+    """Folds the typed event stream into bounded health state.
+
+    Parameters
+    ----------
+    eps_budget:
+        Privacy budget in ε; ``eps_spent`` crossing it is an error alarm.
+    carbon_budget_g:
+        Carbon budget in grams CO₂; ``cum_co2_g`` crossing it is an error.
+    divergence_factor:
+        Loss above ``factor × best_loss`` (after ``warmup`` events) flags
+        divergence.
+    z_thresh:
+        Straggler threshold on the duration z-score against exponential
+        moving mean/variance (EMA ``alpha``).
+    stall_after_events:
+        Consecutive events without simulated-time advance before the
+        sim-stall detector fires (events carrying no ``sim_time_s`` — all
+        zeros, as in batch runs — never trip it).
+    max_alerts_per_kind:
+        Retained :class:`HealthEvent` records per kind; counts stay exact
+        past the cap.
+    """
+
+    def __init__(self,
+                 eps_budget: Optional[float] = None,
+                 carbon_budget_g: Optional[float] = None,
+                 divergence_factor: float = 10.0,
+                 z_thresh: float = 4.0,
+                 alpha: float = 0.05,
+                 warmup: int = 30,
+                 stall_after_events: int = 10_000,
+                 max_alerts_per_kind: int = 8):
+        self.eps_budget = eps_budget
+        self.carbon_budget_g = carbon_budget_g
+        self.divergence_factor = float(divergence_factor)
+        self.z_thresh = float(z_thresh)
+        self.alpha = float(alpha)
+        self.warmup = int(warmup)
+        self.stall_after_events = int(stall_after_events)
+        self.max_alerts_per_kind = int(max_alerts_per_kind)
+
+        self.events_seen = 0
+        self.counts: dict[str, int] = {}
+        self.alerts: list[HealthEvent] = []
+        self._fired_once: set[str] = set()
+
+        self._best_loss = math.inf
+        self._ema_mean = 0.0   # latency EMA
+        self._ema_var = 0.0
+        self._ema_n = 0
+        self._last_round = -1
+        self._last_sim_s = 0.0
+        self._since_advance = 0
+
+    # ------------------------------------------------------------------
+    def _alert(self, kind: str, severity: str, message: str,
+               sim_time_s: float, **context) -> None:
+        n = self.counts.get(kind, 0)
+        self.counts[kind] = n + 1
+        if n < self.max_alerts_per_kind:
+            self.alerts.append(HealthEvent(
+                kind=kind, severity=severity, message=message,
+                sim_time_s=float(sim_time_s), context=context))
+
+    def emit(self, event: RoundEvent) -> None:
+        self.events_seen += 1
+        sim_s = event.sim_time_s
+        loss = event.loss
+        dur = event.duration_s
+
+        # a round counter going backwards means a new run segment (e.g. the
+        # next strategy sharing this monitor): its loss/latency regime is
+        # unrelated, so the divergence/straggler baselines start over
+        if event.round < self._last_round:
+            self._best_loss = math.inf
+            self._ema_mean = self._ema_var = 0.0
+            self._ema_n = 0
+        self._last_round = event.round
+
+        # --- NaN / divergence sentinel ---------------------------------
+        if not math.isfinite(loss):
+            self._alert("nan", "error", f"non-finite loss {loss!r}", sim_s,
+                        event=self.events_seen)
+        else:
+            if loss < self._best_loss:
+                self._best_loss = loss
+            elif (self.events_seen > self.warmup
+                  and self._best_loss > 0.0
+                  and loss > self.divergence_factor * self._best_loss):
+                self._alert("divergence", "warn",
+                            f"loss {loss:.4g} > {self.divergence_factor:g}x "
+                            f"best {self._best_loss:.4g}", sim_s,
+                            loss=loss, best_loss=self._best_loss)
+
+        # --- straggler z-score on latency EMAs -------------------------
+        if self._ema_n >= self.warmup:
+            sd = math.sqrt(self._ema_var)
+            if sd > 0.0:
+                z = (dur - self._ema_mean) / sd
+                if z > self.z_thresh:
+                    ctx = {"duration_s": dur, "z": z}
+                    if isinstance(event, FlushEvent):
+                        ctx["region"] = event.region
+                    self._alert("straggler", "warn",
+                                f"duration {dur:.4g}s is {z:.1f} sigma above "
+                                f"EMA {self._ema_mean:.4g}s", sim_s, **ctx)
+        # EMA update after the check: an outlier should be judged against
+        # the state it has not yet polluted.
+        d = dur - self._ema_mean
+        self._ema_mean += self.alpha * d
+        self._ema_var = (1.0 - self.alpha) * (self._ema_var + self.alpha * d * d)
+        self._ema_n += 1
+
+        # --- budget alarms (fire once: a budget stays crossed) ---------
+        if (self.eps_budget is not None and event.eps_spent >= self.eps_budget
+                and "eps_budget" not in self._fired_once):
+            self._fired_once.add("eps_budget")
+            self._alert("eps_budget", "error",
+                        f"privacy budget exhausted: eps_spent "
+                        f"{event.eps_spent:.4g} >= {self.eps_budget:g}",
+                        sim_s, eps_spent=event.eps_spent)
+        if (self.carbon_budget_g is not None
+                and event.cum_co2_g >= self.carbon_budget_g
+                and "carbon_budget" not in self._fired_once):
+            self._fired_once.add("carbon_budget")
+            self._alert("carbon_budget", "error",
+                        f"carbon budget exhausted: cum_co2_g "
+                        f"{event.cum_co2_g:.4g} >= {self.carbon_budget_g:g}",
+                        sim_s, cum_co2_g=event.cum_co2_g)
+
+        # --- sim-stall detector ----------------------------------------
+        if sim_s > self._last_sim_s:
+            self._last_sim_s = sim_s
+            self._since_advance = 0
+        elif sim_s > 0.0 or self._last_sim_s > 0.0:  # sim clock in use
+            self._since_advance += 1
+            if self._since_advance == self.stall_after_events:
+                self._alert("sim_stall", "warn",
+                            f"simulated time stuck at {self._last_sim_s:.4g}s "
+                            f"for {self._since_advance} events", sim_s,
+                            events=self._since_advance)
+
+    # ------------------------------------------------------------------
+    @property
+    def ok(self) -> bool:
+        """True when no *error*-severity alert has fired (warns allowed)."""
+        return not any(a.severity == "error" for a in self.alerts)
+
+    def snapshot(self) -> dict:
+        return {
+            "schema": HEALTH_SCHEMA,
+            "ok": self.ok,
+            "events_seen": self.events_seen,
+            "counts": dict(sorted(self.counts.items())),
+            "alerts": [a.to_dict() for a in self.alerts],
+        }
+
+    def to_json(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=1, sort_keys=True)
+        return path
+
+
+def read_health(path: str) -> dict:
+    """Load and schema-check a ``health.json`` document."""
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or doc.get("schema") != HEALTH_SCHEMA:
+        raise ValueError(
+            f"{path}: not a health artifact "
+            f"(schema {doc.get('schema') if isinstance(doc, dict) else None!r}, "
+            f"this build reads {HEALTH_SCHEMA!r})"
+        )
+    return doc

@@ -2,9 +2,11 @@
 
 :class:`MetricsRegistry` is a tiny in-process metrics store (no external
 deps, no background threads): named counters (monotonic sums), gauges (last
-value wins), and histograms (raw observations; percentiles computed at
-snapshot time).  ``snapshot()`` returns a plain JSON-safe dict, so the
-registry doubles as a durable run artifact via :meth:`MetricsRegistry.to_json`.
+value wins), and histograms (raw observations until ``Histogram.SPILL_AT``,
+then bounded-memory log buckets — see ``repro.obs.streaming``; percentiles
+computed at snapshot time).  ``snapshot()`` returns a plain JSON-safe dict,
+so the registry doubles as a durable run artifact via
+:meth:`MetricsRegistry.to_json`.
 
 :class:`MetricsSink` implements the ``repro.api.telemetry.TelemetrySink``
 protocol and folds the typed event stream into aggregates the paper's
@@ -32,6 +34,7 @@ import os
 from typing import Optional
 
 from repro.api.telemetry import FlushEvent, MixEvent, RoundEvent
+from repro.obs.streaming import StreamingHistogram
 
 
 class Counter:
@@ -60,44 +63,84 @@ class Gauge:
         return self.value
 
 
-class Histogram:
-    """Raw-observation histogram; quantiles interpolated at snapshot time.
+def _quantile(sorted_vs: list[float], q: float) -> float:
+    """Linear-interpolated quantile over an already-sorted list."""
+    if not sorted_vs:
+        return float("nan")
+    if len(sorted_vs) == 1:
+        return sorted_vs[0]
+    pos = (q / 100.0) * (len(sorted_vs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_vs) - 1)
+    frac = pos - lo
+    return sorted_vs[lo] * (1.0 - frac) + sorted_vs[hi] * frac
 
-    Runs emit a few thousand events at most, so storing raw values is
-    cheaper and more faithful than fixed buckets.
+
+class Histogram:
+    """Raw-observation histogram that spills to log buckets at scale.
+
+    Below ``spill_at`` observations, raw values are stored and quantiles
+    are exact (batch runs emit a few thousand events at most, so raw
+    storage is cheaper and more faithful than buckets).  At the threshold
+    the values fold into a :class:`~repro.obs.streaming.StreamingHistogram`
+    — count/sum/min/max stay exact, quantiles become relative-error-bounded
+    — and memory stops growing, which is what lets ``MetricsSink`` meter a
+    10⁵–10⁶-update engine replay (the ``streaming: true`` snapshot key
+    marks a spilled histogram).
     """
 
-    def __init__(self) -> None:
+    #: raw observations kept before folding into log buckets
+    SPILL_AT = 4096
+
+    def __init__(self, spill_at: Optional[int] = None) -> None:
         self.values: list[float] = []
+        self.spill_at = self.SPILL_AT if spill_at is None else int(spill_at)
+        self._stream: Optional[StreamingHistogram] = None
 
     def observe(self, v: float) -> None:
+        if self._stream is not None:
+            self._stream.observe(v)
+            return
         self.values.append(float(v))
+        if self.spill_at > 0 and len(self.values) >= self.spill_at:
+            self._spill()
+
+    def _spill(self) -> None:
+        h = StreamingHistogram()
+        for v in self.values:
+            h.observe(v)
+        self._stream = h
+        self.values = []
+
+    @property
+    def count(self) -> int:
+        return self._stream.count if self._stream is not None else len(self.values)
+
+    @property
+    def streaming(self) -> bool:
+        """True once the histogram spilled into bounded-memory buckets."""
+        return self._stream is not None
 
     def percentile(self, q: float) -> float:
-        """Linear-interpolated quantile, q in [0, 100]."""
-        vs = sorted(self.values)
-        if not vs:
-            return float("nan")
-        if len(vs) == 1:
-            return vs[0]
-        pos = (q / 100.0) * (len(vs) - 1)
-        lo = int(pos)
-        hi = min(lo + 1, len(vs) - 1)
-        frac = pos - lo
-        return vs[lo] * (1.0 - frac) + vs[hi] * frac
+        """Quantile, q in [0, 100] (exact until spill, then ±rel_err)."""
+        if self._stream is not None:
+            return self._stream.percentile(q)
+        return _quantile(sorted(self.values), q)
 
     def snapshot(self) -> dict:
-        vs = self.values
-        if not vs:
+        if self._stream is not None:
+            return self._stream.snapshot()
+        if not self.values:
             return {"count": 0}
+        vs = sorted(self.values)  # once per snapshot, shared by every quantile
         return {
             "count": len(vs),
-            "min": min(vs),
-            "max": max(vs),
+            "min": vs[0],
+            "max": vs[-1],
             "mean": sum(vs) / len(vs),
-            "p50": self.percentile(50),
-            "p90": self.percentile(90),
-            "p99": self.percentile(99),
+            "p50": _quantile(vs, 50),
+            "p90": _quantile(vs, 90),
+            "p99": _quantile(vs, 99),
         }
 
 

@@ -8,9 +8,16 @@ CO₂ actually went:
   * per-phase span table: count, total/mean time, share of the traced
     wall-clock (root spans), plus the CO₂ and bytes the instrumented spans
     attached as attributes;
+  * per-name span *rollups* (``spans_rollup.json``) when the run traced
+    with sampling — these cover every span, the JSONL only the sample;
   * event totals: rounds/flushes/mixes, final accuracy, cumulative CO₂
     (with the per-region split for async runs), privacy budget spent, and
-    wire bytes moved.
+    wire bytes moved;
+  * the simulated-time timeline (``timeline.json``) headline: bins, bin
+    width, horizon, and the series the run binned;
+  * an **Alerts** section from ``health.json`` — with ``--strict`` the CLI
+    exits 2 when any error-severity alert fired, so CI can gate on run
+    health.
 
 Arguments may be a run directory (the layout ``RunArtifacts`` writes) or
 any mix of span/event JSONL files — rows are classified by shape, so the
@@ -24,18 +31,21 @@ import os
 import sys
 from typing import Iterable, Optional
 
+from repro.obs.health import HEALTH_SCHEMA
 from repro.obs.runinfo import MANIFEST_SCHEMA
 from repro.obs.sinks import read_events
+from repro.obs.timeline import TIMELINE_SCHEMA
 from repro.obs.trace import read_spans
 from repro.api.telemetry import FlushEvent, MixEvent
 
 
 def _classify(path: str) -> str:
-    """span | events | manifest | unknown, by content shape.
+    """span | events | manifest | timeline | health | rollup | unknown.
 
-    ``.json`` artifacts (manifest, Chrome trace, metrics) are whole-file
-    documents — possibly pretty-printed — while the ``.jsonl`` streams are
-    classified from their first row.
+    ``.json`` artifacts are whole-file documents — possibly pretty-printed
+    — told apart by their ``schema`` field (or, for span rollups, their
+    key shape), while the ``.jsonl`` streams are classified from their
+    first row.
     """
     if path.endswith(".json"):
         try:
@@ -43,8 +53,16 @@ def _classify(path: str) -> str:
                 doc = json.load(f)
         except (json.JSONDecodeError, OSError):
             return "unknown"
-        if isinstance(doc, dict) and doc.get("schema") == MANIFEST_SCHEMA:
-            return "manifest"
+        if isinstance(doc, dict):
+            schema = doc.get("schema")
+            if schema == MANIFEST_SCHEMA:
+                return "manifest"
+            if schema == TIMELINE_SCHEMA:
+                return "timeline"
+            if schema == HEALTH_SCHEMA:
+                return "health"
+            if "spans" in doc and "sample" in doc:
+                return "rollup"
         return "unknown"  # Chrome trace / metrics: re-renderings of the JSONL
     with open(path) as f:
         for line in f:
@@ -64,10 +82,13 @@ def _classify(path: str) -> str:
 
 
 def gather(paths: Iterable[str]) -> dict:
-    """Resolve CLI arguments to {spans, events, manifest}."""
+    """Resolve CLI arguments to {spans, events, manifest, timelines, health, rollup}."""
     span_rows: list[dict] = []
     events: list = []
     manifest: Optional[dict] = None
+    timelines: list[tuple[str, dict]] = []
+    health: Optional[dict] = None
+    rollup: Optional[dict] = None
     files: list[str] = []
     for p in paths:
         if os.path.isdir(p):
@@ -86,9 +107,19 @@ def gather(paths: Iterable[str]) -> dict:
         elif kind == "manifest":
             with open(fn) as f:
                 manifest = json.load(f)
+        elif kind == "timeline":
+            with open(fn) as f:
+                timelines.append((os.path.basename(fn), json.load(f)))
+        elif kind == "health":
+            with open(fn) as f:
+                health = json.load(f)
+        elif kind == "rollup":
+            with open(fn) as f:
+                rollup = json.load(f)
         # unknown files (e.g. the Chrome trace.json, metrics.json) are skipped:
         # their content is a re-rendering of the JSONL streams
-    return {"spans": span_rows, "events": events, "manifest": manifest}
+    return {"spans": span_rows, "events": events, "manifest": manifest,
+            "timelines": timelines, "health": health, "rollup": rollup}
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +230,59 @@ def render(data: dict) -> str:
             lines.append(f"  CO2 by region: {per_reg}")
         if ev["final_consensus"] is not None:
             lines.append(f"  final consensus distance: {ev['final_consensus']:.5f}")
+    rollup = data.get("rollup")
+    if rollup and rollup.get("spans"):
+        # the rollup covers every span — when the trace was sampled it is
+        # the authoritative per-phase count/percentile source
+        lines.append("")
+        lines.append(
+            "span rollups (every span; trace sampled at {:g}):".format(
+                rollup.get("sample", 1.0))
+            + (f"  [{rollup['dropped_spans']} spans shed by max_spans]"
+               if rollup.get("dropped_spans") else "")
+        )
+        lines.append(
+            f"  {'phase':<14}{'count':>8}{'total_s':>10}{'mean_ms':>10}"
+            f"{'p50_ms':>10}{'p99_ms':>10}"
+        )
+        for name, st in sorted(rollup["spans"].items(),
+                               key=lambda kv: -kv[1]["total_s"]):
+            lines.append(
+                f"  {name:<14}{st['count']:>8}{st['total_s']:>10.3f}"
+                f"{st['mean_ms']:>10.2f}{st['p50_ms']:>10.2f}{st['p99_ms']:>10.2f}"
+            )
+    for fn, tl in data.get("timelines") or []:
+        series = sorted(tl.get("series", {}))
+        carbon = [s for s in series if s.startswith("carbon_intensity/")]
+        rest = [s for s in series if not s.startswith("carbon_intensity/")]
+        if carbon:
+            rest.append(f"carbon_intensity x{len(carbon)} regions")
+        horizon = (tl.get("meta") or {}).get("horizon_s")
+        lines.append("")
+        lines.append(
+            f"timeline {fn}: {tl['n_bins']} bins x {tl['bin_s']:g} s"
+            + (f" (horizon {horizon:g} s)" if horizon else "")
+        )
+        if rest:
+            lines.append(f"  series: {', '.join(rest)}")
+    health = data.get("health")
+    if health is not None:
+        lines.append("")
+        n_alerts = sum(health.get("counts", {}).values())
+        if n_alerts == 0:
+            lines.append(
+                f"alerts: none ({health.get('events_seen', 0)} events monitored)"
+            )
+        else:
+            verdict = "healthy" if health.get("ok") else "UNHEALTHY"
+            lines.append(f"alerts: {n_alerts} ({verdict})")
+            for kind, c in sorted(health["counts"].items()):
+                lines.append(f"  {kind}: {c}")
+            for a in health.get("alerts", [])[:10]:
+                lines.append(
+                    f"  [{a['severity']}] {a['kind']} @ sim {a['sim_time_s']:.0f} s: "
+                    f"{a['message']}"
+                )
     if not spans and not data["events"]:
         lines.append("no span or event rows found")
     return "\n".join(lines)
@@ -211,9 +295,14 @@ def main(argv: Optional[list[str]] = None) -> int:
     )
     ap.add_argument("paths", nargs="+",
                     help="run directory (RunArtifacts layout) or JSONL files")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 2 if the run's health.json carries any "
+                         "error-severity alert")
     args = ap.parse_args(argv)
     data = gather(args.paths)
     print(render(data))
+    if args.strict and data["health"] is not None and not data["health"].get("ok"):
+        return 2
     return 0 if (data["spans"] or data["events"]) else 1
 
 

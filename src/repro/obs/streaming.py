@@ -1,0 +1,211 @@
+"""Bounded-memory streaming telemetry primitives.
+
+PR 5's raw-observation :class:`~repro.obs.metrics.Histogram` is faithful at
+batch scale ("a few thousand events at most") but a 10⁵–10⁶-update engine
+run would grow it without bound.  This module holds the engine-scale
+replacements, all O(1)-per-observation and O(buckets)-total:
+
+:class:`StreamingHistogram`
+    DDSketch-style log-bucketed histogram: exact ``count``/``sum``/``min``/
+    ``max``/``mean``, and quantiles answered from geometric buckets with a
+    guaranteed *relative* error bound (``rel_err``, default 1%): the
+    returned quantile ``q̂`` satisfies ``|q̂ − q| ≤ rel_err · |q|`` for any
+    positive or negative value distribution.  Memory is the number of
+    occupied buckets — log-spaced, so ~1.4k buckets span float64's entire
+    positive range at 1% error, and real latency/CO₂ streams occupy a few
+    dozen.
+
+:class:`WindowedRate`
+    Sliding-window rate counter on an injectable clock (wall by default,
+    a ``SimClock`` reader for simulated time): ``add`` marks events into a
+    fixed ring of time slots, ``rate`` answers events/second over the
+    window that the ring currently covers.  Used by the live run tailer
+    (``python -m repro.obs.watch``) and anywhere a "current rate" beats a
+    lifetime mean.
+
+``repro.obs.metrics.Histogram`` spills into a :class:`StreamingHistogram`
+once its raw-value list passes a threshold, so every existing registry and
+``MetricsSink`` keeps its API while gaining the memory bound.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Optional
+
+#: values with |v| below this are counted in the exact zero bucket
+_TINY = 1e-12
+
+
+class StreamingHistogram:
+    """Log-bucketed histogram with relative-error-bounded quantiles.
+
+    Buckets are geometric: value ``v > 0`` lands in bucket
+    ``ceil(log_gamma(v))`` with ``gamma = (1 + rel_err) / (1 - rel_err)``,
+    and a bucket's representative value ``2·gamma^i / (gamma + 1)`` (the
+    harmonic midpoint) is within ``rel_err`` of anything the bucket holds.
+    Negative values mirror into their own bucket map; near-zero values get
+    an exact zero bucket.  count/sum/min/max are tracked exactly alongside.
+    """
+
+    __slots__ = ("rel_err", "gamma", "_lg", "count", "sum", "min", "max",
+                 "zero_count", "_pos", "_neg")
+
+    def __init__(self, rel_err: float = 0.01):
+        if not 0.0 < rel_err < 1.0:
+            raise ValueError(f"rel_err must be in (0, 1), got {rel_err}")
+        self.rel_err = float(rel_err)
+        self.gamma = (1.0 + rel_err) / (1.0 - rel_err)
+        self._lg = math.log(self.gamma)
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self.zero_count = 0
+        self._pos: dict[int, int] = {}
+        self._neg: dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def n_buckets(self) -> int:
+        """Occupied buckets — the histogram's entire variable memory."""
+        return len(self._pos) + len(self._neg) + (1 if self.zero_count else 0)
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.sum += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+        if v > _TINY:
+            i = math.ceil(math.log(v) / self._lg)
+            self._pos[i] = self._pos.get(i, 0) + 1
+        elif v < -_TINY:
+            i = math.ceil(math.log(-v) / self._lg)
+            self._neg[i] = self._neg.get(i, 0) + 1
+        else:
+            self.zero_count += 1
+
+    # ------------------------------------------------------------------
+    def _bucket_value(self, i: int) -> float:
+        """Harmonic midpoint of bucket ``i``: within rel_err of any member."""
+        return 2.0 * self.gamma ** i / (self.gamma + 1.0)
+
+    def percentile(self, q: float) -> float:
+        """Quantile ``q`` in [0, 100] with relative error <= ``rel_err``.
+
+        Walks buckets in value order — negatives from most to least
+        negative, then zeros, then positives ascending — to the target
+        rank; the answer is clamped into the exact [min, max] envelope so
+        extreme quantiles never overshoot the observed range.
+        """
+        if self.count == 0:
+            return float("nan")
+        rank = (q / 100.0) * (self.count - 1)
+        seen = 0
+        out: Optional[float] = None
+        for i in sorted(self._neg, reverse=True):  # most negative first
+            seen += self._neg[i]
+            if seen > rank:
+                out = -self._bucket_value(i)
+                break
+        if out is None and self.zero_count:
+            seen += self.zero_count
+            if seen > rank:
+                out = 0.0
+        if out is None:
+            for i in sorted(self._pos):
+                seen += self._pos[i]
+                if seen > rank:
+                    out = self._bucket_value(i)
+                    break
+        if out is None:  # numeric slack at q=100
+            out = self.max
+        return min(max(out, self.min), self.max)
+
+    # ------------------------------------------------------------------
+    def merge(self, other: "StreamingHistogram") -> None:
+        """Fold ``other`` in (bucket-exact when ``rel_err`` matches)."""
+        if abs(other.gamma - self.gamma) > 1e-12:
+            raise ValueError("cannot merge histograms with different rel_err")
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        self.zero_count += other.zero_count
+        for i, c in other._pos.items():
+            self._pos[i] = self._pos.get(i, 0) + c
+        for i, c in other._neg.items():
+            self._neg[i] = self._neg.get(i, 0) + c
+
+    def snapshot(self) -> dict:
+        """JSON-safe summary, same keys as the exact histogram's plus the
+        ``streaming`` marker (count/min/max/mean stay exact)."""
+        if self.count == 0:
+            return {"count": 0}
+        return {
+            "count": self.count,
+            "min": self.min,
+            "max": self.max,
+            "mean": self.sum / self.count,
+            "p50": self.percentile(50),
+            "p90": self.percentile(90),
+            "p99": self.percentile(99),
+            "streaming": True,
+            "rel_err": self.rel_err,
+            "n_buckets": self.n_buckets,
+        }
+
+
+class WindowedRate:
+    """Events/second over a sliding window on an injectable clock.
+
+    A fixed ring of ``n_slots`` equal time slots covers ``window_s``
+    seconds; ``add`` drops weight into the current slot (clearing slots
+    the clock has lapped), ``rate`` divides the surviving weight by the
+    window actually covered so a counter younger than the window is not
+    under-reported.
+    """
+
+    def __init__(self, window_s: float = 60.0, n_slots: int = 60,
+                 clock: Callable[[], float] = time.monotonic):
+        if window_s <= 0 or n_slots < 1:
+            raise ValueError(f"bad window: window_s={window_s}, n_slots={n_slots}")
+        self.window_s = float(window_s)
+        self.n_slots = int(n_slots)
+        self._slot_s = self.window_s / self.n_slots
+        self._clock = clock
+        self._weights = [0.0] * self.n_slots
+        self._epochs = [-1] * self.n_slots  # absolute slot index each ring
+        #                                     position currently holds
+        self._t0: Optional[float] = None    # first add (window coverage)
+
+    def _slot(self, t: float) -> int:
+        """Ring position for time ``t``, clearing a lapped slot."""
+        abs_slot = int(t / self._slot_s)
+        pos = abs_slot % self.n_slots
+        if self._epochs[pos] != abs_slot:
+            self._epochs[pos] = abs_slot
+            self._weights[pos] = 0.0
+        return pos
+
+    def add(self, n: float = 1.0, t: Optional[float] = None) -> None:
+        t = self._clock() if t is None else float(t)
+        if self._t0 is None:
+            self._t0 = t
+        self._weights[self._slot(t)] += n
+
+    def rate(self, t: Optional[float] = None) -> float:
+        """Events/second over the window (0.0 before any ``add``)."""
+        t = self._clock() if t is None else float(t)
+        if self._t0 is None:
+            return 0.0
+        now_slot = int(t / self._slot_s)
+        total = sum(
+            w for w, e in zip(self._weights, self._epochs)
+            if e > now_slot - self.n_slots  # still inside the window
+        )
+        covered = min(self.window_s, max(t - self._t0, self._slot_s))
+        return total / covered

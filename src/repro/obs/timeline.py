@@ -1,0 +1,209 @@
+"""Simulated-time-binned run series: ``timeline.json``.
+
+A batch run is summarized by per-round history columns, but an engine run
+has no rounds in common across disciplines — what its disciplines *do*
+share is the :class:`~repro.engine.clock.SimClock`.  A :class:`Timeline`
+bins named series against simulated seconds so a 10⁵-update replay leaves
+a fixed-size picture of *when* things happened: events/s, CO₂ g/s against
+the trace's regional carbon curves, consensus/error, staleness, wire
+bytes, active clients.
+
+Memory is **O(max_bins) regardless of the simulated horizon** via
+bin-doubling compaction: bins start ``bin_s`` wide, and whenever a record
+lands past the last bin the width doubles and adjacent bin pairs merge
+(sums add, means pool, maxes max, last keeps the later half).  A 2-hour
+replay and a 2-year one both cost ``max_bins`` bins — only the resolution
+differs, and it degrades by at most 2× per doubling.
+
+Series kinds::
+
+    sum    per-bin total (events, co2_g, wire_bytes) — rate/s = value/bin_s
+    mean   per-bin average of samples (staleness, carbon intensity)
+    max    per-bin maximum (active_clients peak)
+    last   latest sample in the bin (error, consensus, gauges)
+
+The durable form is schema-versioned JSON (``metafed-timeline/v1``),
+written by :meth:`Timeline.save` and read back by :func:`read_timeline`;
+``python -m repro.obs.report`` summarizes it and ``python -m
+repro.obs.watch`` uses its ``meta.horizon_s`` for the live ETA.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Optional
+
+import numpy as np
+
+TIMELINE_SCHEMA = "metafed-timeline/v1"
+
+KINDS = ("sum", "mean", "max", "last")
+
+
+class _Series:
+    """One named series: (max_bins,) value/count arrays + its fold rule."""
+
+    __slots__ = ("kind", "val", "cnt")
+
+    def __init__(self, kind: str, max_bins: int):
+        if kind not in KINDS:
+            raise ValueError(f"unknown series kind {kind!r}; one of {KINDS}")
+        self.kind = kind
+        self.val = np.zeros(max_bins, np.float64)
+        self.cnt = np.zeros(max_bins, np.int64)
+
+    def record(self, b: int, v: float) -> None:
+        if self.kind == "sum":
+            self.val[b] += v
+        elif self.kind == "mean":
+            self.val[b] += v
+        elif self.kind == "max":
+            self.val[b] = v if self.cnt[b] == 0 else max(self.val[b], v)
+        else:  # last
+            self.val[b] = v
+        self.cnt[b] += 1
+
+    def compact(self) -> None:
+        """Merge adjacent bin pairs in place (bin width doubled)."""
+        n = self.val.shape[0]
+        half = n // 2
+        lo, hi = self.val[0:n:2], self.val[1:n:2]
+        lo_c, hi_c = self.cnt[0:n:2], self.cnt[1:n:2]
+        if self.kind in ("sum", "mean"):
+            merged = lo + hi
+        elif self.kind == "max":
+            merged = np.where(hi_c > 0, np.where(lo_c > 0, np.maximum(lo, hi), hi), lo)
+        else:  # last: the later half wins when it has data
+            merged = np.where(hi_c > 0, hi, lo)
+        self.val[:half] = merged
+        self.cnt[:half] = lo_c + hi_c
+        self.val[half:] = 0.0
+        self.cnt[half:] = 0
+
+    def values(self, n: int) -> list:
+        """JSON row for the first ``n`` bins: empty bins are ``None``;
+        mean series divide pooled sums by their sample counts."""
+        out: list = []
+        for b in range(n):
+            if self.cnt[b] == 0:
+                out.append(None)
+            elif self.kind == "mean":
+                out.append(float(self.val[b] / self.cnt[b]))
+            else:
+                out.append(float(self.val[b]))
+        return out
+
+
+class Timeline:
+    """Bin-doubling simulated-time series collector (O(max_bins) memory)."""
+
+    def __init__(self, max_bins: int = 512, bin_s: float = 60.0,
+                 meta: Optional[dict] = None):
+        if max_bins < 2 or bin_s <= 0:
+            raise ValueError(f"bad timeline: max_bins={max_bins}, bin_s={bin_s}")
+        self.max_bins = int(max_bins)
+        self.bin_s = float(bin_s)
+        self.meta = dict(meta or {})
+        self._series: dict[str, _Series] = {}
+        self._hi = 0  # bins used (highest touched index + 1)
+
+    # ------------------------------------------------------------------
+    @property
+    def n_bins(self) -> int:
+        """Bins with data so far (the serialized row length)."""
+        return self._hi
+
+    @property
+    def series_names(self) -> list[str]:
+        return sorted(self._series)
+
+    def _compact(self) -> None:
+        self.bin_s *= 2.0
+        for s in self._series.values():
+            s.compact()
+        self._hi = (self._hi + 1) // 2
+
+    def record(self, name: str, t_s: float, value: float,
+               kind: str = "sum") -> None:
+        """Fold ``value`` into ``name``'s bin at simulated time ``t_s``.
+
+        A series' kind is fixed by its first record; a later conflicting
+        ``kind`` raises (same get-or-create discipline as the registry).
+        """
+        t_s = float(t_s)
+        if not math.isfinite(t_s) or t_s < 0.0:
+            raise ValueError(f"timeline times must be finite and >= 0, got {t_s!r}")
+        s = self._series.get(name)
+        if s is None:
+            s = self._series[name] = _Series(kind, self.max_bins)
+        elif s.kind != kind:
+            raise TypeError(
+                f"series {name!r} already registered as {s.kind!r}, not {kind!r}"
+            )
+        while t_s >= self.max_bins * self.bin_s:
+            self._compact()
+        b = int(t_s / self.bin_s)
+        s.record(b, float(value))
+        if b + 1 > self._hi:
+            self._hi = b + 1
+
+    def record_carbon(self, trace, horizon_s: Optional[float] = None) -> None:
+        """Bin a trace's per-region carbon-intensity step curves as
+        ``carbon_intensity/r<i>`` mean series, so ``timeline.json`` carries
+        the regional curves the run's CO₂ rate is read against.
+        ``horizon_s`` caps the binned range (a replay capped below the
+        trace's horizon should not widen its bins for curve samples it
+        never reaches)."""
+        horizon = float(trace.horizon_s)
+        if horizon_s is not None:
+            horizon = min(horizon, float(horizon_s))
+        for j, t in enumerate(np.asarray(trace.carbon_t_s, np.float64)):
+            if t >= horizon:
+                break
+            for r in range(trace.n_regions):
+                self.record(f"carbon_intensity/r{r}", float(t),
+                            float(trace.carbon_intensity[r, j]), kind="mean")
+        self.meta.setdefault("horizon_s", horizon)
+
+    # ------------------------------------------------------------------
+    def rate_per_s(self, name: str) -> list:
+        """Per-second rate rows of a ``sum`` series (None where empty)."""
+        s = self._series[name]
+        if s.kind != "sum":
+            raise TypeError(f"rate_per_s needs a 'sum' series, {name!r} is {s.kind!r}")
+        return [None if v is None else v / self.bin_s
+                for v in s.values(self._hi)]
+
+    def to_dict(self) -> dict:
+        return {
+            "schema": TIMELINE_SCHEMA,
+            "bin_s": self.bin_s,
+            "n_bins": self._hi,
+            "max_bins": self.max_bins,
+            "meta": self.meta,
+            "series": {
+                name: {"kind": s.kind, "values": s.values(self._hi),
+                       "counts": [int(c) for c in s.cnt[: self._hi]]}
+                for name, s in sorted(self._series.items())
+            },
+        }
+
+    def save(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=True)
+        return path
+
+
+def read_timeline(path: str) -> dict:
+    """Load and schema-check a ``timeline.json`` document."""
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or doc.get("schema") != TIMELINE_SCHEMA:
+        raise ValueError(
+            f"{path}: not a timeline artifact "
+            f"(schema {doc.get('schema') if isinstance(doc, dict) else None!r}, "
+            f"this build reads {TIMELINE_SCHEMA!r})"
+        )
+    return doc

@@ -14,6 +14,17 @@ load directly) and, when a ``jsonl_path`` is given, streamed one JSON line
 per span as they close, flushed per line so a crash loses at most the
 partial final line.
 
+At engine scale (10⁵–10⁶ spans per run) retaining every span would defeat
+the observability layer's own memory bound, so a tracer can *sample*:
+``Tracer(sample=0.01)`` keeps one span in 100 per name (deterministic —
+the first of every period, so rare span names always keep their first
+occurrence) in memory and in the JSONL stream, while per-name
+:class:`SpanStats` rollups (count / total / min / max / p50 / p99 via
+bounded log-bucket histograms) are updated for **every** span, sampled or
+not — aggregate attribution survives sampling exactly.  ``max_spans``
+additionally hard-caps the in-memory list (the JSONL stream keeps
+flowing; ``dropped_spans`` counts what the cap shed).
+
 :class:`NullTracer` is the default everywhere a tracer is optional: its
 ``span`` returns a shared no-op context manager (no allocation, no clock
 read), so instrumented hot paths cost nothing when tracing is off.  The
@@ -24,9 +35,12 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 import time
 from typing import Any, Callable, Optional, TextIO
+
+from repro.obs.streaming import StreamingHistogram
 
 
 def _json_safe(v: Any) -> Any:
@@ -71,6 +85,44 @@ class SpanRecord:
             "tid": tid,
             "cat": "repro",
             "args": self.attrs,
+        }
+
+
+class SpanStats:
+    """Per-name duration rollup, updated for every span (sampled or not).
+
+    count/total/min/max are exact; p50/p99 come from a bounded
+    :class:`~repro.obs.streaming.StreamingHistogram` (1% relative error),
+    so a million spans of one name cost a few dozen buckets.
+    """
+
+    __slots__ = ("count", "total_s", "min_s", "max_s", "hist")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.total_s = 0.0
+        self.min_s = math.inf
+        self.max_s = 0.0
+        self.hist = StreamingHistogram()
+
+    def observe(self, dur_s: float) -> None:
+        self.count += 1
+        self.total_s += dur_s
+        if dur_s < self.min_s:
+            self.min_s = dur_s
+        if dur_s > self.max_s:
+            self.max_s = dur_s
+        self.hist.observe(dur_s)
+
+    def snapshot(self) -> dict:
+        return {
+            "count": self.count,
+            "total_s": self.total_s,
+            "mean_ms": 1e3 * self.total_s / self.count if self.count else 0.0,
+            "min_ms": 1e3 * self.min_s if self.count else 0.0,
+            "max_ms": 1e3 * self.max_s,
+            "p50_ms": 1e3 * self.hist.percentile(50) if self.count else 0.0,
+            "p99_ms": 1e3 * self.hist.percentile(99) if self.count else 0.0,
         }
 
 
@@ -136,6 +188,13 @@ class NullTracer:
     def spans(self) -> list:
         return []
 
+    @property
+    def stats(self) -> dict:
+        return {}
+
+    def rollup(self) -> dict:
+        return {}
+
     def chrome_trace(self) -> dict:
         return {"traceEvents": [], "displayTimeUnit": "ms"}
 
@@ -153,21 +212,38 @@ class Tracer:
     Parameters
     ----------
     jsonl_path:
-        When given, every completed span is appended to this file as one
-        JSON line (flushed immediately — crash-safe up to the last line).
+        When given, sampled spans are appended to this file as one JSON
+        line each (flushed immediately — crash-safe up to the last line).
     clock:
         Monotonic second counter; ``time.perf_counter`` by default
         (injectable for deterministic tests).
+    sample:
+        Fraction of spans to *record* (in memory + JSONL), per name.
+        Deterministic: with ``sample=0.01`` the 1st, 101st, 201st, ...
+        occurrence of each name is kept, so every span name appears at
+        least once.  :class:`SpanStats` rollups see every span regardless.
+    max_spans:
+        Hard cap on the in-memory span list (the JSONL stream keeps
+        flowing past it); ``dropped_spans`` counts what the cap shed.
     """
 
     enabled = True
 
     def __init__(self, jsonl_path: Optional[str] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 sample: float = 1.0,
+                 max_spans: Optional[int] = None):
+        if not 0.0 < sample <= 1.0:
+            raise ValueError(f"sample must be in (0, 1], got {sample}")
         self._clock = clock
         self._epoch = clock()
         self._depth = 0
         self.spans: list[SpanRecord] = []
+        self.stats: dict[str, SpanStats] = {}
+        self.sample = float(sample)
+        self._period = max(1, round(1.0 / self.sample))
+        self.max_spans = max_spans
+        self.dropped_spans = 0
         self._jsonl: Optional[TextIO] = None
         self.jsonl_path = jsonl_path
         if jsonl_path is not None:
@@ -185,9 +261,18 @@ class Tracer:
 
     def _exit(self, name: str, t0: float, dur: float, depth: int, attrs: dict) -> None:
         self._depth = depth
+        st = self.stats.get(name)
+        if st is None:
+            st = self.stats[name] = SpanStats()
+        st.observe(dur)
+        if (st.count - 1) % self._period != 0:  # not this name's sample turn
+            return
         rec = SpanRecord(name=name, start_s=t0 - self._epoch, dur_s=dur,
                          depth=depth, attrs=attrs)
-        self.spans.append(rec)
+        if self.max_spans is None or len(self.spans) < self.max_spans:
+            self.spans.append(rec)
+        else:
+            self.dropped_spans += 1
         if self._jsonl is not None:
             self._jsonl.write(json.dumps(rec.jsonl_row()) + "\n")
             self._jsonl.flush()
@@ -211,6 +296,18 @@ class Tracer:
         os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
         with open(path, "w") as f:
             json.dump(self.chrome_trace(), f)
+        return path
+
+    def rollup(self) -> dict:
+        """Per-name duration rollups over **every** span (sampling-proof)."""
+        return {name: st.snapshot() for name, st in sorted(self.stats.items())}
+
+    def export_rollup(self, path: str) -> str:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"sample": self.sample,
+                       "dropped_spans": self.dropped_spans,
+                       "spans": self.rollup()}, f, indent=1, sort_keys=True)
         return path
 
     def close(self) -> None:

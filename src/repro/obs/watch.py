@@ -1,0 +1,165 @@
+"""``python -m repro.obs.watch <run_dir>`` — live tailer for in-progress runs.
+
+Follows a run's ``events.jsonl`` as it is written (every event line is
+flushed on emit, so the stream is tail-safe) and prints one status line per
+poll interval:
+
+    events=1284 (+97)  rate=48.2/s  sim=3.4 h  x2710  eta=42 s  CO2=812 g  alerts=0
+
+``rate`` is a sliding-window events/second (:class:`WindowedRate`); ``x``
+is the *sim-compression ratio* — simulated seconds advanced per host
+second — and the ETA divides the remaining simulated horizon by it.  The
+horizon comes from ``--horizon-s``, or from ``timeline.json``'s
+``meta.horizon_s`` when the run (or a previous one in the directory) wrote
+one; without either the ETA column is omitted.
+
+Events are also folded into a live :class:`~repro.obs.health.HealthMonitor`,
+so NaNs, budget breaches, and stalls surface while the run is still going —
+``alerts`` counts them and any *error*-severity alert is printed as it
+fires.
+
+``--once`` reads whatever is on disk, prints a single line, and exits —
+the CI/testing mode.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Optional
+
+from repro.api.telemetry import RoundEvent
+from repro.obs.health import HealthMonitor
+from repro.obs.sinks import EVENT_TYPES
+from repro.obs.streaming import WindowedRate
+from repro.obs.timeline import read_timeline
+
+
+class EventTail:
+    """Incremental reader of a :class:`JsonlSink` log.
+
+    Each :meth:`poll` parses the complete lines appended since the last
+    one (byte offsets, binary reads — a partial trailing line is buffered
+    until its newline arrives), yielding typed events.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._off = 0
+        self._buf = b""
+
+    def poll(self) -> list[RoundEvent]:
+        try:
+            size = os.path.getsize(self.path)
+        except OSError:
+            return []
+        if size <= self._off:
+            return []
+        with open(self.path, "rb") as f:
+            f.seek(self._off)
+            chunk = f.read()
+        self._off += len(chunk)
+        self._buf += chunk
+        events: list[RoundEvent] = []
+        while b"\n" in self._buf:
+            line, self._buf = self._buf.split(b"\n", 1)
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line.decode("utf-8"))
+            cls = EVENT_TYPES.get(row.pop("event", None))
+            if cls is None:
+                continue  # future event types: skip, keep tailing
+            row["selected"] = tuple(row.get("selected") or ())
+            events.append(cls(**row))
+        return events
+
+
+def _fmt_sim(s: float) -> str:
+    return f"{s / 3600.0:.1f} h" if s >= 3600.0 else f"{s:.0f} s"
+
+
+def _find_horizon(run_dir: str) -> Optional[float]:
+    p = os.path.join(run_dir, "timeline.json")
+    if os.path.exists(p):
+        try:
+            return (read_timeline(p).get("meta") or {}).get("horizon_s")
+        except (ValueError, OSError):
+            return None
+    return None
+
+
+def watch(run_dir: str, *, interval_s: float = 2.0, once: bool = False,
+          horizon_s: Optional[float] = None, max_polls: Optional[int] = None,
+          stream=None) -> int:
+    out = stream or sys.stdout
+    events_path = (run_dir if run_dir.endswith(".jsonl")
+                   else os.path.join(run_dir, "events.jsonl"))
+    if horizon_s is None and os.path.isdir(run_dir):
+        horizon_s = _find_horizon(run_dir)
+    tail = EventTail(events_path)
+    rate = WindowedRate(window_s=30.0, n_slots=30)
+    health = HealthMonitor()
+    n = 0
+    last: Optional[RoundEvent] = None
+    sim0: Optional[float] = None
+    t0 = time.monotonic()
+    polls = 0
+    while True:
+        fresh = tail.poll()
+        for e in fresh:
+            rate.add()
+            health.emit(e)
+            last = e
+            if sim0 is None:
+                sim0 = e.sim_time_s
+        new_errors = [a for a in health.alerts[n:] if a.severity == "error"]
+        n = len(health.alerts)
+        seen = health.events_seen
+        parts = [f"events={seen} (+{len(fresh)})", f"rate={rate.rate():.1f}/s"]
+        if last is not None:
+            sim_now = last.sim_time_s
+            parts.append(f"sim={_fmt_sim(sim_now)}")
+            wall = time.monotonic() - t0
+            if sim0 is not None and sim_now > sim0 and wall > 0:
+                comp = (sim_now - sim0) / wall
+                parts.append(f"x{comp:.0f}")
+                if horizon_s and comp > 0 and sim_now < horizon_s:
+                    parts.append(f"eta={(horizon_s - sim_now) / comp:.0f} s")
+            parts.append(f"CO2={last.cum_co2_g:.0f} g")
+        parts.append(f"alerts={sum(health.counts.values())}")
+        print("  ".join(parts), file=out, flush=True)
+        for a in new_errors:
+            print(f"  [error] {a.kind}: {a.message}", file=out, flush=True)
+        polls += 1
+        if once or (max_polls is not None and polls >= max_polls):
+            return 0 if health.ok else 2
+        time.sleep(interval_s)
+
+
+def main(argv: Optional[list[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.watch",
+        description="Tail a run's events.jsonl: live rates, sim progress, ETA, alerts.",
+    )
+    ap.add_argument("run_dir", help="run directory (RunArtifacts layout) "
+                                    "or an events.jsonl path")
+    ap.add_argument("--interval", type=float, default=2.0,
+                    help="poll interval in seconds (default 2)")
+    ap.add_argument("--once", action="store_true",
+                    help="print one status line from the current artifacts and exit")
+    ap.add_argument("--horizon-s", type=float, default=None,
+                    help="simulated horizon for the ETA (else read from "
+                         "timeline.json when present)")
+    args = ap.parse_args(argv)
+    try:
+        return watch(args.run_dir, interval_s=args.interval, once=args.once,
+                     horizon_s=args.horizon_s)
+    except KeyboardInterrupt:
+        return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
